@@ -1,0 +1,97 @@
+"""Roofline report: render dryrun_results.json into the EXPERIMENTS.md tables.
+
+Per (arch x shape x mesh): the three roofline terms, the dominant one, the
+MODEL_FLOPS/HLO ratio, per-device memory, and a one-line bottleneck note.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+NOTES = {
+    "compute_s": "compute-bound: raise MXU utilization (larger per-chip tiles, "
+                 "fewer remat passes) or accept — this is the roofline target",
+    "memory_s": "HBM-bound: cut activation traffic (fusion, bf16 masks, "
+                "flash-style attention) or raise arithmetic intensity",
+    "collective_s": "ICI-bound: cut FSDP gathers (weight-stationary where it fits), "
+                    "overlap collectives with compute, int8-compress cross-pod grads",
+}
+
+
+def fmt(v, digits=3):
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) < 1e-3 or abs(v) >= 1e5:
+            return f"{v:.2e}"
+        return f"{v:.{digits}f}"
+    return str(v)
+
+
+def render(path: str = "dryrun_results.json", mesh: str | None = None,
+           variant: str = "baseline") -> str:
+    results = [r for r in json.load(open(path))
+               if r.get("variant", "baseline") == variant]
+    rows = []
+    hdr = ("| arch | shape | mesh | status | compute_s | memory_s | collective_s "
+           "| dominant | MODEL/HLO flops | roofline frac | bytes/dev (GB) |")
+    sep = "|" + "---|" * 11
+    rows += [hdr, sep]
+    for r in sorted(results, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if mesh and r["mesh"] != mesh:
+            continue
+        rl = r.get("roofline", {})
+        mem = r.get("memory", {})
+        gb = (mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)) / 2**30 \
+            if mem else None
+        status = r["status"] if r["status"] != "SKIP" else f"SKIP({r['reason'][:40]})"
+        rows.append("| " + " | ".join([
+            r["arch"], r["shape"], r["mesh"], status,
+            fmt(rl.get("compute_s")), fmt(rl.get("memory_s")),
+            fmt(rl.get("collective_s")), r.get("dominant", "-"),
+            fmt(r.get("useful_flop_ratio")), fmt(r.get("roofline_fraction"), 4),
+            fmt(gb, 2),
+        ]) + " |")
+    return "\n".join(rows)
+
+
+def bottleneck_notes(path: str = "dryrun_results.json") -> str:
+    results = json.load(open(path))
+    out = []
+    for r in sorted(results, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("mesh") != "16x16" or "dominant" not in r \
+                or r.get("variant", "baseline") != "baseline":
+            continue
+        out.append(f"- **{r['arch']} x {r['shape']}** — dominant {r['dominant']}: "
+                   f"{NOTES[r['dominant']]}")
+    return "\n".join(out)
+
+
+def run(csv_rows: list[str]) -> None:
+    try:
+        results = json.load(open("dryrun_results.json"))
+    except FileNotFoundError:
+        csv_rows.append("roofline,skipped,no dryrun_results.json (run repro.launch.dryrun)")
+        print(csv_rows[-1])
+        return
+    n_pass = sum(r["status"] == "PASS" for r in results)
+    n_skip = sum(r["status"] == "SKIP" for r in results)
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    csv_rows.append(f"dryrun_cells,{len(results)},pass={n_pass}/skip={n_skip}/fail={n_fail}")
+    for r in results:
+        if "roofline" not in r:
+            continue
+        rl = r["roofline"]
+        csv_rows.append(
+            f"roofline,{r['arch']}|{r['shape']}|{r['mesh']},"
+            f"compute={rl['compute_s']:.3g}s/memory={rl['memory_s']:.3g}s/"
+            f"collective={rl['collective_s']:.3g}s/dom={r['dominant']}/"
+            f"frac={r.get('roofline_fraction', 0):.4f}")
+    for row in csv_rows[-min(len(csv_rows), 8):]:
+        print(row, flush=True)
+
+
+if __name__ == "__main__":
+    print(render(*sys.argv[1:]))

@@ -1,0 +1,89 @@
+"""End-to-end driver: train a small LM, compress its projections with the
+paper's pipeline (sharing + LCC), and SERVE batched requests — the paper's
+technique as a first-class feature of the serving stack.
+
+    PYTHONPATH=src python examples/transformer_compress_serve.py [--steps 60]
+"""
+import argparse
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as core
+from repro.configs import get_arch, reduced_config
+from repro.data.synthetic import MarkovLM
+from repro.models import api
+from repro.optim.optimizers import sgd
+from repro.serving.engine import ServingEngine
+from repro.training.trainer import init_train_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--arch", default="olmo-1b")
+    args = ap.parse_args()
+
+    cfg = reduced_config(get_arch(args.arch), vocab=64, n_layers=2, d_model=64,
+                         d_ff=128, n_heads=4, n_kv_heads=4, head_dim=16)
+    lm = MarkovLM(vocab=64, k=4, seed=0)
+    print(f"== 1. train {args.arch}-reduced on a Markov stream "
+          f"(entropy {lm.entropy:.2f} nats/token) ==")
+    opt = sgd(momentum=0.9)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    step = jax.jit(make_train_step(cfg, opt, lr=0.3))
+    for i in range(args.steps):
+        b = lm.batch(8, 32, seed=i)
+        state, m = step(state, {k: jnp.asarray(v) for k, v in b.items()})
+        if i % 20 == 0 or i == args.steps - 1:
+            print(f"   step {i:3d}  loss {float(m['loss']):.3f}")
+    params = state.params
+
+    print("== 2. Algorithm 1 on every FFN projection ==")
+    report = core.ModelCostReport()
+    new_blocks = dict(params["blocks"])
+    for proj in ("gate", "up", "down"):
+        stack = np.asarray(params["blocks"]["ffn"][proj]["w"], np.float64)
+        out = []
+        for li in range(stack.shape[0]):
+            w = stack[li].T  # act as y = W x
+            cd = core.compress_dense_matrix(
+                f"ffn.{proj}.l{li}", w,
+                core.CompressionConfig(algorithm="fs", weight_sharing=True,
+                                       max_share_rel_err=0.06), report)
+            eff = np.zeros_like(w)
+            eff[:, cd.kept_columns] = cd.effective
+            out.append(eff.T.astype(np.float32))
+        new_blocks["ffn"] = dict(new_blocks.get("ffn", params["blocks"]["ffn"]))
+        new_blocks["ffn"][proj] = {"w": jnp.asarray(np.stack(out))}
+    params_c = dict(params)
+    params_c["blocks"] = {**params["blocks"], "ffn": new_blocks["ffn"]}
+    print(report.table())
+
+    print("== 3. serve batched requests: original vs compressed ==")
+    prompts = [lm.sample(1, 8, seed=100 + i)[0, :8].tolist() for i in range(6)]
+    eng = ServingEngine(params, cfg, n_slots=4, max_len=64)
+    eng_c = ServingEngine(params_c, cfg, n_slots=4, max_len=64)
+    res = eng.generate(prompts, max_new_tokens=12)
+    res_c = eng_c.generate(prompts, max_new_tokens=12)
+    agree = np.mean([np.mean(np.array(a.tokens[a.prompt_len:])
+                             == np.array(b.tokens[b.prompt_len:]))
+                     for a, b in zip(res, res_c)])
+    # token validity: generated tokens follow the chain's transition structure
+    def validity(rs):
+        ok = tot = 0
+        for r in rs:
+            for t in range(len(r.tokens) - 1):
+                ok += r.tokens[t + 1] in lm.succ[r.tokens[t]]
+                tot += 1
+        return ok / tot
+    print(f"   greedy-token agreement original vs compressed: {agree:.2%}")
+    print(f"   chain-validity original {validity(res):.2%} | "
+          f"compressed {validity(res_c):.2%}")
+    print(f"   total adds ratio (FFN projections): {report.ratio('lcc'):.1f}x")
+
+
+if __name__ == "__main__":
+    main()

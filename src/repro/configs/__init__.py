@@ -1,0 +1,5 @@
+from .base import (  # noqa: F401
+    ArchConfig, MLASpec, MoESpec, SSMSpec, SHAPE_CELLS, ShapeCell,
+    cell_supported, input_specs, reduced_config,
+)
+from .registry import ARCHS, get_arch  # noqa: F401

@@ -1,0 +1,21 @@
+"""Registry of the 10 assigned architectures (one module per arch),
+selectable via ``--arch <id>``."""
+from __future__ import annotations
+
+from .base import ArchConfig
+from . import (deepseek_v2_lite_16b, llama3_2_3b, mixtral_8x22b, olmo_1b,
+               qwen2_5_3b, qwen2_vl_7b, rwkv6_1_6b, whisper_small, yi_9b,
+               zamba2_7b)
+
+__all__ = ["ARCHS", "get_arch"]
+
+ARCHS: dict[str, ArchConfig] = {m.CONFIG.name: m.CONFIG for m in (
+    mixtral_8x22b, deepseek_v2_lite_16b, zamba2_7b, qwen2_5_3b, olmo_1b,
+    yi_9b, llama3_2_3b, whisper_small, qwen2_vl_7b, rwkv6_1_6b,
+)}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]

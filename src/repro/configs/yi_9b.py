@@ -1,0 +1,8 @@
+"""yi-9b: 48L d4096 32H (GQA kv=4) d_ff=11008 V=64000. [arXiv:2403.04652]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="yi-9b", family="dense",
+    n_layers=48, d_model=4096, n_heads=32, n_kv_heads=4, d_ff=11008, vocab=64000,
+    notes="llama-arch GQA [arXiv:2403.04652]",
+)

@@ -1,0 +1,19 @@
+"""The paper's contribution: LCC + group-lasso pruning + weight sharing."""
+from .compress import (  # noqa: F401
+    CompressibleConv,
+    CompressibleDense,
+    CompressionConfig,
+    compress_conv_kernel,
+    compress_dense_matrix,
+    compress_model_params,
+)
+from .cost import LayerCost, ModelCostReport  # noqa: F401
+from .csd import adds_csd_matrix, csd_digit_count, csd_digits, quantize_fixed  # noqa: F401
+from .group_lasso import group_lasso_penalty, group_prox_rows, prox_dense_columns  # noqa: F401
+from .lcc import LCCDecomposition, lcc_decompose, snr_db  # noqa: F401
+from .weight_sharing import (  # noqa: F401
+    SharedLayer,
+    affinity_propagation,
+    cluster_columns,
+    shared_matvec,
+)

@@ -1,0 +1,240 @@
+"""Algorithm 1: the complete NN compression procedure for LCC.
+
+    1. regularized (group-lasso, proximal) training      -> repro.optim.ProxSGD
+    2. affinity-propagation clustering + tied retraining -> weight_sharing
+    3. LCC decomposition of every (equivalent) matrix    -> lcc
+
+This module orchestrates steps 2-3 on trained parameters and produces the
+per-layer cost report; step 1 happens inside the training loop (the prox is an
+optimizer transform).  It is model-agnostic: a model exposes *compressible
+units* (dense matrices or conv kernels) through small adapter records.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from .conv_reshape import conv_fk_matrices, conv_layer_adds, conv_pk_matrices
+from .cost import LayerCost, ModelCostReport, shared_layer_adds
+from .csd import adds_csd_matrix
+from .lcc import LCCDecomposition, lcc_decompose
+from .weight_sharing import SharedLayer, cluster_columns
+
+__all__ = [
+    "CompressionConfig",
+    "CompressibleDense",
+    "CompressibleConv",
+    "CompressedDense",
+    "compress_dense_matrix",
+    "compress_conv_kernel",
+    "compress_model_params",
+    "prune_columns",
+]
+
+
+@dataclass
+class CompressionConfig:
+    algorithm: str = "fs"  # 'fp' | 'fs'
+    s_terms: int = 2
+    frac_bits: int = 8
+    target_snr_db: float | None = None  # None => match CSD quantization SNR
+    slice_width: int | None = None
+    weight_sharing: bool = True
+    share_damping: float = 0.7
+    share_preference: float | None = None
+    conv_method: str = "pk"  # 'fk' | 'pk'
+    prune_tol: float = 1e-8  # column-norm threshold: drop pruned inputs
+    max_share_rel_err: float | None = None  # drop sharing if ||W-G[labels]||/||W|| exceeds
+                                            # (paper: 'provided this has minimal impact';
+                                            # the full remedy is eq.-(9) retraining)
+    max_factors: int = 24
+    max_terms_per_row: int = 64
+
+
+@dataclass
+class CompressibleDense:
+    name: str
+    weight: np.ndarray  # [N, K] acting as y = W x
+
+
+@dataclass
+class CompressibleConv:
+    name: str
+    kernel: np.ndarray  # [N, K, O, O]
+
+
+@dataclass
+class CompressedDense:
+    """Everything needed to run + account one compressed dense layer."""
+
+    name: str
+    kept_columns: np.ndarray  # indices into the original K inputs
+    shared: SharedLayer | None  # None if weight sharing disabled
+    decomposition: LCCDecomposition
+    effective: np.ndarray  # dense equivalent of the compressed map [N, K_kept]
+
+    def apply(self, x: np.ndarray) -> np.ndarray:
+        """Reference evaluation: x [K_orig, ...] -> y [N, ...]."""
+        xk = x[self.kept_columns]
+        if self.shared is not None:
+            c = self.shared.n_clusters
+            agg = np.zeros((c,) + xk.shape[1:])
+            np.add.at(agg, self.shared.labels, xk)
+            return self.decomposition.apply(agg)
+        return self.decomposition.apply(xk)
+
+
+def prune_columns(w: np.ndarray, tol: float) -> tuple[np.ndarray, np.ndarray]:
+    """Drop (near-)zero columns produced by the group-lasso prox."""
+    norms = np.linalg.norm(w, axis=0)
+    keep = np.where(norms > tol)[0]
+    if keep.size == 0:
+        keep = np.array([int(np.argmax(norms))])
+    return w[:, keep], keep
+
+
+def compress_dense_matrix(
+    name: str,
+    w: np.ndarray,
+    cfg: CompressionConfig,
+    report: ModelCostReport | None = None,
+) -> CompressedDense:
+    """Steps 2-3 of Algorithm 1 for one dense matrix (already reg-trained)."""
+    w = np.asarray(w, dtype=np.float64)
+    baseline = adds_csd_matrix(w, cfg.frac_bits)
+
+    wp, kept = prune_columns(w, cfg.prune_tol)
+    pruned_adds = adds_csd_matrix(wp, cfg.frac_bits)
+
+    shared: SharedLayer | None = None
+    target = wp
+    pre_agg = 0
+    if cfg.weight_sharing and wp.shape[1] > 2:
+        labels, cents = cluster_columns(
+            wp, damping=cfg.share_damping, preference=cfg.share_preference
+        )
+        rel = float(np.linalg.norm(wp - cents[:, labels]) /
+                    max(np.linalg.norm(wp), 1e-30))
+        if cfg.max_share_rel_err is not None and rel > cfg.max_share_rel_err:
+            shared = None  # too lossy without eq.-(9) retraining: skip sharing
+        else:
+            shared = SharedLayer(centroids=cents, labels=labels)
+            target = cents
+            pre_agg = shared.pre_aggregation_adds()
+
+    dec = lcc_decompose(
+        target,
+        algorithm=cfg.algorithm,
+        s_terms=cfg.s_terms,
+        target_snr_db=cfg.target_snr_db,
+        frac_bits=cfg.frac_bits,
+        slice_width=cfg.slice_width,
+        max_factors=cfg.max_factors,
+        max_terms_per_row=cfg.max_terms_per_row,
+    )
+
+    if report is not None:
+        lc = LayerCost(name=name, baseline_adds=baseline)
+        lc.stage_adds["pruned"] = pruned_adds
+        if shared is not None:
+            lc.stage_adds["shared"] = shared_layer_adds(shared, cfg.frac_bits)
+        lc.stage_adds["lcc"] = pre_agg + dec.num_adds()
+        lc.stage_bytes["dense_bf16"] = 2 * w.shape[0] * w.shape[1]
+        lc.stage_bytes["lcc"] = dec.storage_bytes() + (shared.labels.nbytes // 4 if shared else 0)
+        lc.extra["kept_cols"] = int(kept.size)
+        lc.extra["clusters"] = int(shared.n_clusters) if shared else None
+        lc.extra["achieved_snr_db"] = dec.meta.get("achieved_snr_db")
+        report.add(lc)
+
+    eff = dec.to_dense()
+    if shared is not None:
+        eff = eff[:, shared.labels]  # expand centroids back over kept columns
+    return CompressedDense(
+        name=name, kept_columns=kept, shared=shared, decomposition=dec, effective=eff
+    )
+
+
+def compress_conv_kernel(
+    name: str,
+    kernel: np.ndarray,
+    cfg: CompressionConfig,
+    report: ModelCostReport | None = None,
+    channel_subsample: int | None = None,
+) -> dict:
+    """Steps 2-3 for a conv layer via the FK or PK matrices.
+
+    ``channel_subsample``: decompose only every n-th input-channel matrix and
+    extrapolate the adds count (used for large ResNet benches on this CPU-only
+    container; the decomposition of each W_k is independent so the estimate is
+    unbiased). Subsampling is recorded in the report.
+    """
+    kernel = np.asarray(kernel, dtype=np.float64)
+    n, k, o, _ = kernel.shape
+    mats = conv_fk_matrices(kernel) if cfg.conv_method == "fk" else conv_pk_matrices(kernel)
+
+    # kernel groups with all-zero rows (pruned by eq. (11) group lasso) drop out
+    ch_nonzero = [i for i in range(k) if np.abs(mats[i]).max() > cfg.prune_tol]
+    base_per = [adds_csd_matrix(mats[i], cfg.frac_bits) for i in range(k)]
+    baseline = conv_layer_adds(base_per, n, o, cfg.conv_method, k)
+
+    sel = ch_nonzero if channel_subsample is None else ch_nonzero[::channel_subsample]
+    decs: dict[int, LCCDecomposition] = {}
+    lcc_per: list[int] = []
+    pruned_per: list[int] = []
+    for i in sel:
+        d = lcc_decompose(
+            mats[i],
+            algorithm=cfg.algorithm,
+            s_terms=cfg.s_terms,
+            target_snr_db=cfg.target_snr_db,
+            frac_bits=cfg.frac_bits,
+            slice_width=cfg.slice_width,
+            max_factors=cfg.max_factors,
+            max_terms_per_row=cfg.max_terms_per_row,
+        )
+        decs[i] = d
+        lcc_per.append(d.num_adds())
+        pruned_per.append(adds_csd_matrix(mats[i], cfg.frac_bits))
+    scale = (len(ch_nonzero) / max(len(sel), 1)) if sel else 0.0
+    lcc_total = conv_layer_adds(
+        [int(np.mean(lcc_per)) if lcc_per else 0] * len(ch_nonzero) if channel_subsample else lcc_per,
+        n, o, cfg.conv_method, len(ch_nonzero),
+    )
+    pruned_total = conv_layer_adds(
+        [adds_csd_matrix(mats[i], cfg.frac_bits) for i in ch_nonzero], n, o,
+        cfg.conv_method, len(ch_nonzero),
+    )
+    if report is not None:
+        lc = LayerCost(name=name, baseline_adds=baseline)
+        lc.stage_adds["pruned"] = pruned_total
+        lc.stage_adds["lcc"] = lcc_total
+        lc.extra["channels_nonzero"] = len(ch_nonzero)
+        lc.extra["subsampled"] = channel_subsample
+        report.add(lc)
+    return {"decompositions": decs, "channels_nonzero": ch_nonzero,
+            "baseline_adds": baseline, "lcc_adds": lcc_total, "scale": scale}
+
+
+def compress_model_params(
+    units: list[CompressibleDense | CompressibleConv],
+    cfg: CompressionConfig,
+    conv_channel_subsample: int | None = None,
+    progress: Callable[[str], None] | None = None,
+) -> tuple[dict, ModelCostReport]:
+    """Run steps 2-3 of Algorithm 1 over every compressible unit of a model."""
+    report = ModelCostReport()
+    out: dict[str, object] = {}
+    for u in units:
+        if progress:
+            progress(u.name)
+        if isinstance(u, CompressibleDense):
+            out[u.name] = compress_dense_matrix(u.name, u.weight, cfg, report)
+        elif isinstance(u, CompressibleConv):
+            out[u.name] = compress_conv_kernel(
+                u.name, u.kernel, cfg, report, channel_subsample=conv_channel_subsample
+            )
+        else:
+            raise TypeError(f"unknown compressible unit {type(u)}")
+    return out, report

@@ -1,0 +1,142 @@
+"""Conv -> CMVM reshaping: FK and PK methods (paper Sec. III-D).
+
+Kernel layout [N, K, O, O] (out-channels, in-channels, kh, kw), inputs
+[B, K, Z, Z] (NCHW).  Both methods view the conv as K per-input-channel
+constant matrices, which is what LCC decomposes and what the group-lasso
+groups (eq. (11)) are defined over.
+
+* FK (full kernel):    W_k in R^{N x O^2},  rows = flattened kernels.
+* PK (partial kernel): W_k in R^{NO x O},   rows = single kernel *columns*
+  (footnote 4: columns are used for the numerics), row order (n, j) -> n*O+j.
+  Taller matrices => better LCC. Column-products are shared across the O
+  horizontal output positions that see the same input column; the O partial
+  outputs per conv are summed afterwards.
+
+Addition accounting is per output spatial position (the ratio in the paper is
+invariant to the position count since baseline and compressed counts both
+scale by it):
+
+  FK:  sum_k adds(W_k) + N*(K_nz - 1)
+  PK:  sum_k adds(W_k) + N*(O - 1) + N*(K_nz - 1)   [amortized: one new
+       column-matvec per output position; O-1 partial combines per output]
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+__all__ = [
+    "conv_fk_matrices",
+    "conv_pk_matrices",
+    "fk_group_matrix",
+    "pk_group_matrix",
+    "conv_forward_reference",
+    "conv_forward_fk",
+    "conv_forward_pk",
+    "conv_layer_adds",
+]
+
+
+def conv_fk_matrices(kernel: np.ndarray) -> np.ndarray:
+    """[N, K, O, O] -> [K, N, O*O]."""
+    n, k, o1, o2 = kernel.shape
+    return np.transpose(kernel, (1, 0, 2, 3)).reshape(k, n, o1 * o2)
+
+
+def conv_pk_matrices(kernel: np.ndarray) -> np.ndarray:
+    """[N, K, O, O] -> [K, N*O, O]; row (n, j) = kernel[n, k, :, j] (a column)."""
+    n, k, oh, ow = kernel.shape
+    # [K, N, ow(j), oh(i)]: row block per n is its ow columns, each of length oh
+    m = np.transpose(kernel, (1, 0, 3, 2))
+    return m.reshape(k, n * ow, oh)
+
+
+def fk_group_matrix(kernel: np.ndarray) -> np.ndarray:
+    """Eq. (11): stack the FK matrices -> groups are rows (= whole kernels)."""
+    mats = conv_fk_matrices(kernel)  # [K, N, O^2]
+    return mats.reshape(-1, mats.shape[-1])
+
+
+def pk_group_matrix(kernel: np.ndarray) -> np.ndarray:
+    """Eq. (11) for PK: groups are single kernel columns."""
+    mats = conv_pk_matrices(kernel)  # [K, N*O, O]
+    return mats.reshape(-1, mats.shape[-1])
+
+
+def conv_forward_reference(x: jnp.ndarray, kernel: jnp.ndarray) -> jnp.ndarray:
+    """Plain VALID / stride-1 conv (cross-correlation), NCHW/OIHW."""
+    return lax.conv_general_dilated(
+        x, kernel, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def conv_forward_fk(x: jnp.ndarray, fk_mats: jnp.ndarray) -> jnp.ndarray:
+    """Conv evaluated through the FK matrices. fk_mats: [K, N, O^2]."""
+    k, n, oo = fk_mats.shape
+    o = int(round(np.sqrt(oo)))
+    b, kk, z, _ = x.shape
+    assert kk == k
+    p = z - o + 1
+    # im2col per channel: [B, K, P, P, O, O]
+    patches = _extract_patches(x, o)
+    # y[b, n, p, q] = sum_k fk[k, n, :] . patch[b, k, p, q, :]
+    return jnp.einsum("kno,bkpqo->bnpq", fk_mats, patches.reshape(b, k, p, p, oo))
+
+
+def conv_forward_pk(x: jnp.ndarray, pk_mats: jnp.ndarray, n_out: int) -> jnp.ndarray:
+    """Conv evaluated through the PK matrices. pk_mats: [K, N*O, O].
+
+    partial[b,k,p,cq,(n,j)] = pk[k,(n,j),:] . x[b,k,p:p+O,cq]  (a column product)
+    y[b,n,p,q] = sum_k sum_j partial at column cq = q + j.
+    """
+    k, no, o = pk_mats.shape
+    n = n_out
+    assert no == n * o
+    b, kk, z, _ = x.shape
+    p = z - o + 1
+    # column windows: [B, K, P, Z, O] — vertical O-slices at every (row p, col c)
+    cols = _extract_vert_windows(x, o)  # [B, K, P, Z, O]
+    part = jnp.einsum("kro,bkpco->bkpcr", pk_mats, cols)  # r = (n, j)
+    part = part.reshape(b, k, p, z, n, o)
+    # gather j-offset columns: y[..., q] = sum_j part[..., q + j, :, j]
+    qs = jnp.arange(p)
+    js = jnp.arange(o)
+    cq = qs[:, None] + js[None, :]  # [P, O]
+    sel = part[:, :, :, cq, :, :]  # [B, K, P, P, O(j), N, O(j')]
+    diag = jnp.einsum("bkpqjnj->bkpqn", sel.reshape(b, k, p, p, o, n, o)[..., :, :, :])
+    # the einsum above picks j == j' (diagonal over the two O axes)
+    y = diag.sum(axis=1)  # sum over input channels
+    return jnp.moveaxis(y, -1, 1)  # [B, N, P, P]
+
+
+def _extract_patches(x: jnp.ndarray, o: int) -> jnp.ndarray:
+    """[B, K, Z, Z] -> [B, K, P, P, O, O] sliding windows (stride 1, valid)."""
+    b, k, z, _ = x.shape
+    p = z - o + 1
+    i = jnp.arange(p)[:, None] + jnp.arange(o)[None, :]  # [P, O]
+    rows = x[:, :, i, :]  # [B, K, P, O, Z]
+    cols = rows[:, :, :, :, i]  # [B, K, P, O, P, O]
+    return jnp.transpose(cols, (0, 1, 2, 4, 3, 5))  # [B, K, P, P, O, O]
+
+
+def _extract_vert_windows(x: jnp.ndarray, o: int) -> jnp.ndarray:
+    """[B, K, Z, Z] -> [B, K, P, Z, O]: vertical O-windows at each (p, column)."""
+    b, k, z, _ = x.shape
+    p = z - o + 1
+    i = jnp.arange(p)[:, None] + jnp.arange(o)[None, :]  # [P, O]
+    win = x[:, :, i, :]  # [B, K, P, O, Z]
+    return jnp.transpose(win, (0, 1, 2, 4, 3))  # [B, K, P, Z, O]
+
+
+def conv_layer_adds(per_matrix_adds: list[int], n_out: int, o: int, method: str,
+                    n_channels_nonzero: int | None = None) -> int:
+    """Per-output-position additions for a conv layer given per-W_k CMVM adds."""
+    k_nz = n_channels_nonzero if n_channels_nonzero is not None else len(per_matrix_adds)
+    total = int(sum(per_matrix_adds))
+    if method == "fk":
+        return total + n_out * max(0, k_nz - 1)
+    if method == "pk":
+        return total + n_out * (o - 1) + n_out * max(0, k_nz - 1)
+    raise ValueError(f"unknown conv method {method!r}")

@@ -1,0 +1,67 @@
+"""Group-lasso regularization via proximal gradients (paper Sec. III-B).
+
+The regularizer (eq. (6)) penalizes the l2 norms of *groups* (rows of a
+reshaped weight matrix), and training interleaves SGD steps with the proximal
+operator (eq. (7)), which is row-wise block soft thresholding (eq. (8)):
+
+    prox(A)_i = max(1 - eta*lambda / ||A_i||_2, 0) * A_i
+
+Group layouts:
+  * dense layers: groups = columns of W (input neurons)  => reshape = W^T
+  * conv layers (FK/PK): groups = rows of the per-input-channel matrices,
+    stacked as eq. (11).
+
+Both numpy (offline) and jax (in-training, used by ``repro.optim.ProxSGD`` and
+the ``group_prox`` Pallas kernel) implementations live here.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "group_prox_rows_np",
+    "group_prox_rows",
+    "group_lasso_penalty",
+    "prox_dense_columns",
+    "prox_dense_columns_np",
+    "group_norms",
+]
+
+_EPS = 1e-12
+
+
+def group_prox_rows_np(a: np.ndarray, thresh: float) -> np.ndarray:
+    """Block soft threshold on rows (eq. (8)), numpy."""
+    a = np.asarray(a, dtype=np.float64)
+    norms = np.linalg.norm(a, axis=-1, keepdims=True)
+    scale = np.maximum(1.0 - thresh / np.maximum(norms, _EPS), 0.0)
+    return scale * a
+
+
+def group_prox_rows(a: jnp.ndarray, thresh: float | jnp.ndarray) -> jnp.ndarray:
+    """Block soft threshold on rows (eq. (8)), jax. Rows are the last-1 axis groups."""
+    norms = jnp.sqrt(jnp.sum(a * a, axis=-1, keepdims=True))
+    scale = jnp.maximum(1.0 - thresh / jnp.maximum(norms, _EPS), 0.0)
+    return scale * a
+
+
+def prox_dense_columns(w: jnp.ndarray, thresh: float | jnp.ndarray) -> jnp.ndarray:
+    """Dense-layer prox: groups are *columns* (input neurons), i.e. rows of W^T."""
+    return group_prox_rows(w.T, thresh).T
+
+
+def prox_dense_columns_np(w: np.ndarray, thresh: float) -> np.ndarray:
+    return group_prox_rows_np(w.T, thresh).T
+
+
+def group_norms(w: np.ndarray | jnp.ndarray, axis: int = 0):
+    """l2 norm per group where ``axis`` indexes *within* the group."""
+    if isinstance(w, np.ndarray):
+        return np.linalg.norm(w, axis=axis)
+    return jnp.sqrt(jnp.sum(w * w, axis=axis))
+
+
+def group_lasso_penalty(w, lam: float, groups_axis: int = 0) -> float:
+    """R = lambda * sum_groups ||group||_2  (eq. (6)), for logging/objective."""
+    return lam * group_norms(w, axis=groups_axis).sum()

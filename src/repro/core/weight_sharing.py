@@ -1,0 +1,165 @@
+"""Weight sharing via affinity-propagation column clustering (paper Sec. III-C).
+
+Pipeline (method of Zhang et al. [29], as adopted by the paper):
+ 1. cluster the *columns* of a trained weight matrix with affinity propagation
+    (implemented from scratch -- no scikit-learn in this environment; same
+    message-passing updates as Frey & Dueck 2007);
+ 2. retrain with tied parameters: the centroid gradient is the *mean* of its
+    members' gradients (eq. (9));
+ 3. evaluate with eq. (10):  W x = sum_i g_i * (sum_{j in I_i} x_j)
+    -- a per-cluster input pre-aggregation (scalar adds only) followed by a
+    small dense matrix of unique centroids.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "affinity_propagation",
+    "cluster_columns",
+    "SharedLayer",
+    "shared_matvec",
+    "centroid_grad_from_member_grads",
+    "expand_centroids",
+]
+
+
+def affinity_propagation(
+    similarity: np.ndarray,
+    damping: float = 0.7,
+    max_iter: int = 300,
+    convergence_iter: int = 20,
+    preference: float | np.ndarray | None = None,
+    seed: int = 0,
+) -> np.ndarray:
+    """Affinity propagation (Frey & Dueck, Science 2007). Returns labels [n].
+
+    ``similarity[i,k]``: suitability of k as exemplar for i. ``preference``
+    (diagonal) controls cluster count; defaults to the median similarity, the
+    standard choice (also sklearn's default).
+    """
+    s = np.array(similarity, dtype=np.float64, copy=True)
+    n = s.shape[0]
+    if n == 1:
+        return np.zeros(1, dtype=np.int64)
+    if preference is None:
+        preference = np.median(s[~np.eye(n, dtype=bool)])
+    s[np.diag_indices(n)] = preference
+    # tiny noise breaks degenerate ties (as in the reference implementation)
+    rng = np.random.default_rng(seed)
+    s += 1e-12 * rng.standard_normal((n, n)) * (np.max(s) - np.min(s) + 1e-30)
+
+    r = np.zeros((n, n))
+    a = np.zeros((n, n))
+    idx = np.arange(n)
+    stable = 0
+    last_ex: np.ndarray | None = None
+    for _ in range(max_iter):
+        # responsibilities
+        as_ = a + s
+        first = np.max(as_, axis=1)
+        jmax = np.argmax(as_, axis=1)
+        as_[idx, jmax] = -np.inf
+        second = np.max(as_, axis=1)
+        rnew = s - first[:, None]
+        rnew[idx, jmax] = s[idx, jmax] - second
+        r = damping * r + (1 - damping) * rnew
+        # availabilities
+        rp = np.maximum(r, 0.0)
+        rp[np.diag_indices(n)] = r[np.diag_indices(n)]
+        col = rp.sum(axis=0)
+        anew = col[None, :] - rp
+        dA = np.diag(anew).copy()
+        anew = np.minimum(anew, 0.0)
+        anew[np.diag_indices(n)] = dA
+        a = damping * a + (1 - damping) * anew
+        # convergence: exemplar set unchanged for ``convergence_iter`` rounds
+        ex = np.where(np.diag(a + r) > 0)[0]
+        if last_ex is not None and ex.size == last_ex.size and np.array_equal(ex, last_ex):
+            stable += 1
+            if stable >= convergence_iter and ex.size > 0:
+                break
+        else:
+            stable = 0
+        last_ex = ex
+
+    exemplars = np.where(np.diag(a + r) > 0)[0]
+    if exemplars.size == 0:
+        exemplars = np.array([int(np.argmax(np.diag(a + r)))])
+    # assign each point to its best exemplar; exemplars point to themselves
+    labels_ex = np.argmax(s[:, exemplars], axis=1)
+    labels_ex[exemplars] = np.arange(exemplars.size)
+    return labels_ex.astype(np.int64)
+
+
+def cluster_columns(
+    w: np.ndarray,
+    damping: float = 0.7,
+    max_iter: int = 300,
+    preference: float | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Cluster the columns of ``w`` -> (labels [K], centroids [N, C]).
+
+    Similarity = negative squared euclidean distance between columns
+    (the standard affinity for AP). Centroids are cluster means.
+    """
+    w = np.asarray(w, dtype=np.float64)
+    cols = w.T  # [K, N]
+    d2 = np.sum(cols**2, axis=1, keepdims=True)
+    sim = -(d2 + d2.T - 2.0 * cols @ cols.T)
+    labels = affinity_propagation(sim, damping=damping, max_iter=max_iter, preference=preference)
+    c = int(labels.max()) + 1
+    centroids = np.zeros((w.shape[0], c))
+    for i in range(c):
+        centroids[:, i] = w[:, labels == i].mean(axis=1)
+    return labels, centroids
+
+
+@dataclass
+class SharedLayer:
+    """Weight-shared layer: W == centroids[:, labels] (eq. (10) evaluation)."""
+
+    centroids: np.ndarray  # [N, C]
+    labels: np.ndarray  # [K] int, cluster id per input column
+
+    @property
+    def n_clusters(self) -> int:
+        return self.centroids.shape[1]
+
+    def expand(self) -> np.ndarray:
+        return self.centroids[:, self.labels]
+
+    def pre_aggregation_adds(self) -> int:
+        """Scalar adds for the per-cluster input sums: sum_i (|I_i| - 1)."""
+        counts = np.bincount(self.labels, minlength=self.n_clusters)
+        return int(np.maximum(counts - 1, 0).sum())
+
+
+def shared_matvec(centroids: jnp.ndarray, labels: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (10):  y = G @ segment_sum(x, labels).  x: [..., K] -> [..., N]."""
+    c = centroids.shape[1]
+    x_agg = jax.ops.segment_sum(
+        jnp.moveaxis(x, -1, 0), labels, num_segments=c
+    )  # [C, ...]
+    y = jnp.tensordot(centroids, x_agg, axes=([1], [0]))  # [N, ...]
+    return jnp.moveaxis(y, 0, -1)
+
+
+def expand_centroids(centroids: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """W = G[:, labels] — used to keep autodiff flowing through tied params."""
+    return jnp.take(centroids, labels, axis=1)
+
+
+def centroid_grad_from_member_grads(w_grad: np.ndarray | jnp.ndarray, labels, n_clusters: int):
+    """Eq. (9): dL/dg_i = (1/|C_i|) * sum_{w in C_i} dL/dw  (columns of W)."""
+    g = jnp.asarray(w_grad)
+    summed = jax.ops.segment_sum(jnp.moveaxis(g, -1, 0), jnp.asarray(labels), num_segments=n_clusters)
+    counts = jax.ops.segment_sum(
+        jnp.ones((g.shape[-1],), g.dtype), jnp.asarray(labels), num_segments=n_clusters
+    )
+    out = summed / jnp.maximum(counts, 1.0)[(...,) + (None,) * (summed.ndim - 1)]
+    return jnp.moveaxis(out, 0, -1)

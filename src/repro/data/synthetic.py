@@ -1,0 +1,104 @@
+"""Synthetic-but-learnable data (no internet / no MNIST in this container).
+
+* ``MarkovLM``: token streams from a sparse random Markov chain — has real
+  structure (per-token optimal loss == chain entropy), so LM training curves
+  are meaningful and a trained model measurably beats the uniform baseline.
+* ``digits_like``: procedural 7-segment-style digit images with jitter + noise
+  (28x28, 10 classes) — the MNIST stand-in for the paper's MLP experiment.
+* ``textures_like``: class-conditional oriented textures (CIFAR/TinyImageNet
+  stand-in for the ResNet experiment).
+
+All generators are deterministic in (seed, index) so input pipelines are
+restart-reproducible (fault-tolerance requirement: a resumed job re-reads the
+same batch sequence).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["MarkovLM", "digits_like", "textures_like", "batches"]
+
+
+class MarkovLM:
+    """Sparse random Markov chain over ``vocab`` tokens; branching ``k``."""
+
+    def __init__(self, vocab: int = 512, k: int = 8, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        self.vocab = vocab
+        self.succ = rng.integers(0, vocab, size=(vocab, k))
+        logits = rng.standard_normal((vocab, k))
+        p = np.exp(logits)
+        self.p = p / p.sum(1, keepdims=True)
+        self.entropy = float(-(self.p * np.log(self.p)).sum(1).mean())
+
+    def sample(self, batch: int, seq_len: int, seed: int) -> np.ndarray:
+        rng = np.random.default_rng((seed, 7919))
+        toks = np.empty((batch, seq_len + 1), np.int32)
+        toks[:, 0] = rng.integers(0, self.vocab, batch)
+        for t in range(seq_len):
+            cur = toks[:, t]
+            choice = (rng.random(batch)[:, None] < np.cumsum(self.p[cur], 1)).argmax(1)
+            toks[:, t + 1] = self.succ[cur, choice]
+        return toks
+
+    def batch(self, batch: int, seq_len: int, seed: int) -> dict:
+        toks = self.sample(batch, seq_len, seed)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+_SEGS = {  # 7-segment truth table per digit
+    0: "abcdef", 1: "bc", 2: "abged", 3: "abgcd", 4: "fgbc",
+    5: "afgcd", 6: "afgedc", 7: "abc", 8: "abcdefg", 9: "abfgcd",
+}
+_SEG_COORDS = {  # (row range, col range) on a 28x28 canvas
+    "a": ((3, 6), (7, 21)), "b": ((6, 14), (18, 21)), "c": ((14, 23), (18, 21)),
+    "d": ((22, 25), (7, 21)), "e": ((14, 23), (7, 10)), "f": ((6, 14), (7, 10)),
+    "g": ((12, 15), (7, 21)),
+}
+
+
+def digits_like(n: int, seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """(x [n, 784] float32 in [0,1], y [n] int32) — procedural digits."""
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, 10, n).astype(np.int32)
+    x = np.zeros((n, 28, 28), np.float32)
+    for i in range(n):
+        img = np.zeros((28, 28), np.float32)
+        dr, dc = rng.integers(-2, 3), rng.integers(-2, 3)
+        for s in _SEGS[int(y[i])]:
+            (r0, r1), (c0, c1) = _SEG_COORDS[s]
+            img[max(r0 + dr, 0):min(r1 + dr, 28), max(c0 + dc, 0):min(c1 + dc, 28)] = 1.0
+        img *= rng.uniform(0.7, 1.0)
+        img += rng.normal(0, 0.15, (28, 28))
+        x[i] = np.clip(img, 0, 1)
+    return x.reshape(n, 784), y
+
+
+def textures_like(n: int, size: int = 32, classes: int = 10,
+                  seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """(x [n, 3, size, size], y [n]) — class = oriented sinusoid grating + hue."""
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, classes, n).astype(np.int32)
+    r = np.arange(size)
+    xx, yy = np.meshgrid(r, r)
+    x = np.empty((n, 3, size, size), np.float32)
+    for i in range(n):
+        c = int(y[i])
+        ang = np.pi * c / classes
+        freq = 0.3 + 0.15 * (c % 3)
+        phase = rng.uniform(0, 2 * np.pi)
+        g = np.sin(freq * (np.cos(ang) * xx + np.sin(ang) * yy) + phase)
+        hue = np.array([np.sin(c), np.cos(c), np.sin(2 * c)])[:, None, None]
+        img = 0.5 + 0.35 * g[None] * (0.5 + 0.5 * hue)
+        img += rng.normal(0, 0.1, (3, size, size))
+        x[i] = np.clip(img, 0, 1)
+    return x, y
+
+
+def batches(x: np.ndarray, y: np.ndarray, batch_size: int, seed: int = 0):
+    """Deterministic epoch shuffler."""
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(len(x))
+    for i in range(0, len(x) - batch_size + 1, batch_size):
+        j = idx[i:i + batch_size]
+        yield x[j], y[j]

@@ -1,0 +1,6 @@
+"""Distribution: sharding policy, gradient compression, pipeline, overlap, elastic."""
+from .sharding import (  # noqa: F401
+    batch_pspecs, decode_state_pspecs, named, param_pspec, params_pspecs,
+)
+from .compress_grads import compressed_psum, init_error_state  # noqa: F401
+from .elastic import HeartbeatMonitor, MeshPlan, plan_for_devices, reshard_tree  # noqa: F401

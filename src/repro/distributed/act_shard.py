@@ -1,0 +1,100 @@
+"""Activation sharding constraints inside model code.
+
+GSPMD propagates shardings from jit boundaries, but without internal anchors
+it frequently replicates layer compute across the model axis (measured on this
+repo: olmo-1b train_4k HLO FLOPs were 5x the TP-ideal before these constraints
+— EXPERIMENTS.md §Perf iteration 1).  Models call ``constrain(x, ...)`` with
+symbolic axes; it becomes a no-op when no mesh is configured (unit tests,
+single-device runs), and silently drops any axis that does not divide.
+
+Symbolic axes: "batch" -> ("pod","data") (whichever exist), "data", "model",
+None.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["set_mesh", "get_mesh", "constrain", "mesh_context"]
+
+_MESH: Mesh | None = None
+
+
+def set_mesh(mesh: Mesh | None) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh() -> Mesh | None:
+    return _MESH
+
+
+class mesh_context:
+    def __init__(self, mesh: Mesh | None):
+        self.mesh = mesh
+
+    def __enter__(self):
+        self.prev = _MESH
+        set_mesh(self.mesh)
+        return self.mesh
+
+    def __exit__(self, *exc):
+        set_mesh(self.prev)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint with symbolic axes and divisibility fallback.
+
+    constrain(h, "batch", None, "model") pins h's dim0 to the dp axes and
+    dim2 to tp; any non-dividing axis silently becomes None.
+    """
+    mesh = _MESH
+    if mesh is None:
+        return x
+    # axes already "manual" at this trace point (inside shard_map bodies, e.g.
+    # the pod axis under compressed-gradient training) must not be referenced
+    manual: set = set()
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and am.axis_names:
+            manual = {n for n, t in zip(am.axis_names, am.axis_types)
+                      if t == jax.sharding.AxisType.Manual}
+    except Exception:
+        pass
+    spec = []
+    for dim, ax in zip(x.shape, axes):
+        if ax is None:
+            spec.append(None)
+            continue
+        if ax in manual:
+            spec.append(None)
+            continue
+        if ax == "batch":
+            cand = tuple(a for a in ("pod", "data")
+                         if a in mesh.shape and a not in manual)
+            if not cand:
+                spec.append(None)
+                continue
+            if dim % _axis_size(mesh, cand) == 0:
+                spec.append(cand if len(cand) > 1 else cand[0])
+            elif dim % _axis_size(mesh, ("data",)) == 0 and "data" in mesh.shape:
+                spec.append("data")
+            else:
+                spec.append(None)
+        else:
+            if ax in mesh.shape and dim % mesh.shape[ax] == 0 and dim >= mesh.shape[ax]:
+                spec.append(ax)
+            else:
+                spec.append(None)
+    spec += [None] * (x.ndim - len(spec))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

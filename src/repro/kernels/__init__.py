@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the paper's compute hot spots (validated interpret=True)."""
+from .group_prox import group_prox  # noqa: F401
+from .lcc_matmul import lcc_factor_matmul  # noqa: F401
+from .shared_matmul import cluster_segment_sum  # noqa: F401

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: LCC factor application  y = F @ x.
+
+TPU adaptation of the paper's shift-add evaluation (DESIGN.md Sec. 2): the
+factor F (rows = at most S signed powers of two) is *stored compactly* in HBM
+as (idx, exp, sign) streams — ~S*(2+1) bytes/row instead of 2*K bytes/row
+dense bf16.  Each grid step decompresses one (bn x bk) tile of F into VMEM via
+a vectorized one-hot * 2^exp construction and feeds the MXU.  Compute stays
+systolic; HBM traffic drops — exactly what matters for memory-bound decode.
+
+Layout:
+  idx  [N, S] int32   column index of term s of row n
+  exp  [N, S] int8    exponent (power of two)
+  sign [N, S] int8    {-1, 0, +1}; 0 marks an unused slot
+  x    [K, B]         activations (features major so y = F x is a plain dot)
+  out  [N, B] f32
+
+Grid (n_blocks, k_blocks, b_blocks); K is the contraction axis — the output
+tile is revisited across k and accumulated in place.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["lcc_factor_matmul"]
+
+
+def _kernel(idx_ref, exp_ref, sign_ref, x_ref, o_ref, *, block_k: int, s_terms: int):
+    k_blk = pl.program_id(1)
+    k0 = k_blk * block_k
+
+    @pl.when(k_blk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    idx = idx_ref[...]  # [bn, S] int32 (global column ids)
+    exp = exp_ref[...].astype(jnp.float32)
+    sign = sign_ref[...].astype(jnp.float32)
+    bn = idx.shape[0]
+
+    # decompress: dense [bn, bk] tile of F restricted to this k block
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bn, block_k), 1) + k0
+    tile = jnp.zeros((bn, block_k), jnp.float32)
+    for s in range(s_terms):
+        val = sign[:, s] * jnp.exp2(exp[:, s])  # 2^e exact in f32
+        hit = (idx[:, s][:, None] == cols).astype(jnp.float32)
+        tile = tile + hit * val[:, None]
+
+    x = x_ref[...].astype(jnp.float32)  # [bk, bb]
+    o_ref[...] += jnp.dot(tile, x, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_k", "block_b", "interpret"))
+def lcc_factor_matmul(
+    idx: jnp.ndarray,
+    exp: jnp.ndarray,
+    sign: jnp.ndarray,
+    x: jnp.ndarray,
+    block_n: int = 128,
+    block_k: int = 128,
+    block_b: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """y[N, B] = F @ x where F is the compact LCC factor (idx, exp, sign)."""
+    n, s_terms = idx.shape
+    k, b = x.shape
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    block_b = min(block_b, b)
+    if n % block_n or k % block_k or b % block_b:
+        raise ValueError(f"shapes ({n},{k},{b}) must tile by ({block_n},{block_k},{block_b})")
+    grid = (n // block_n, k // block_k, b // block_b)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_k=block_k, s_terms=s_terms),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, s_terms), lambda i, j, p: (i, 0)),
+            pl.BlockSpec((block_n, s_terms), lambda i, j, p: (i, 0)),
+            pl.BlockSpec((block_n, s_terms), lambda i, j, p: (i, 0)),
+            pl.BlockSpec((block_k, block_b), lambda i, j, p: (j, p)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_b), lambda i, j, p: (i, p)),
+        out_shape=jax.ShapeDtypeStruct((n, b), jnp.float32),
+        interpret=interpret,
+    )(idx, exp, sign, x)

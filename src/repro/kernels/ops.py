@@ -1,0 +1,198 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Bridges ``repro.core.lcc`` decomposition objects (numpy, offline) to the TPU
+runtime format: pads factors to block multiples, packs (idx, exp, sign)
+arrays, applies whole chains / decompositions, and evaluates weight-shared
+layers (paper eq. (10)) as segment-sum + centroid matmul.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lcc import LCCChain, LCCDecomposition
+
+from .group_prox import group_prox
+from .lcc_matmul import lcc_factor_matmul
+from .shared_matmul import cluster_segment_sum
+
+__all__ = [
+    "PackedFactor",
+    "PackedChain",
+    "pack_chain",
+    "pack_decomposition",
+    "apply_packed_chain",
+    "apply_packed_decomposition",
+    "shared_matmul_tpu",
+    "group_prox",
+]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class PackedFactor:
+    idx: jnp.ndarray  # [N_pad, S] int32
+    exp: jnp.ndarray  # [N_pad, S] int8
+    sign: jnp.ndarray  # [N_pad, S] int8
+    in_dim: int  # unpadded
+    out_dim: int  # unpadded
+
+    @property
+    def compact_bytes(self) -> int:
+        """HBM bytes in the deployment stream format (int16 idx + int8 code)."""
+        return int(3 * int(np.asarray(self.sign != 0).sum()))
+
+
+@dataclass(frozen=True)
+class PackedChain:
+    factors: tuple[PackedFactor, ...]
+    in_dim: int
+    out_dim: int
+
+
+def pack_chain(chain: LCCChain, block: int = 128) -> PackedChain:
+    """Pad every factor of an FP chain to block multiples for the kernel."""
+    packed = []
+    prev_dim = chain.in_dim
+    for f in chain.factors:
+        n_pad = _round_up(f.out_dim, min(block, max(f.out_dim, 1)))
+        idx = np.zeros((n_pad, f.s_terms), np.int32)
+        exp = np.zeros((n_pad, f.s_terms), np.int8)
+        sgn = np.zeros((n_pad, f.s_terms), np.int8)
+        idx[: f.out_dim] = f.idx
+        exp[: f.out_dim] = f.exp
+        sgn[: f.out_dim] = f.sign
+        packed.append(
+            PackedFactor(jnp.asarray(idx), jnp.asarray(exp), jnp.asarray(sgn),
+                         in_dim=prev_dim, out_dim=f.out_dim)
+        )
+        prev_dim = f.out_dim
+    return PackedChain(tuple(packed), in_dim=chain.in_dim, out_dim=prev_dim)
+
+
+def apply_packed_chain(pc: PackedChain, x: jnp.ndarray, *, block: int = 128,
+                       interpret: bool = True) -> jnp.ndarray:
+    """y[N, B] = (F_P ... F_1) @ x[K, B] running every factor on the kernel.
+
+    Padded rows carry sign==0 slots (value 0) so they stay exactly zero through
+    the chain; the final slice recovers the true output dim.
+    """
+    k, b = x.shape
+    assert k == pc.in_dim, (k, pc.in_dim)
+    bb = min(block, b)
+    b_pad = _round_up(b, bb)
+    if b_pad != b:
+        x = jnp.pad(x, ((0, 0), (0, b_pad - b)))
+    for pf in pc.factors:
+        bk = min(block, pf.idx.shape[0] if x.shape[0] == 0 else x.shape[0])
+        k_pad = _round_up(x.shape[0], bk)
+        if k_pad != x.shape[0]:
+            x = jnp.pad(x, ((0, k_pad - x.shape[0]), (0, 0)))
+        bn = min(block, pf.idx.shape[0])
+        x = lcc_factor_matmul(pf.idx, pf.exp, pf.sign, x,
+                              block_n=bn, block_k=min(bk, x.shape[0]),
+                              block_b=bb, interpret=interpret)
+    return x[: pc.out_dim, :b]
+
+
+def pack_decomposition(dec: LCCDecomposition, block: int = 128):
+    """Pack every FP slice chain. (FS programs run via their dense equivalent —
+    the FS DAG is an offline/storage format; see DESIGN.md Sec. 2.)"""
+    out = []
+    for (c0, c1), s in zip(dec.col_slices, dec.slices):
+        if isinstance(s, LCCChain):
+            out.append(((c0, c1), pack_chain(s, block)))
+        else:
+            out.append(((c0, c1), jnp.asarray(s.to_dense(), jnp.float32)))
+    return out
+
+
+def apply_packed_decomposition(packed, x: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """y = W_hat @ x for a packed decomposition; x [K, B]."""
+    y = None
+    for (c0, c1), item in packed:
+        xs = x[c0:c1]
+        if isinstance(item, PackedChain):
+            part = apply_packed_chain(item, xs, interpret=interpret)
+        else:
+            part = item @ xs.astype(jnp.float32)
+        y = part if y is None else y + part
+    return y
+
+
+def shared_matmul_tpu(centroids: jnp.ndarray, labels: jnp.ndarray, x: jnp.ndarray,
+                      *, interpret: bool = True) -> jnp.ndarray:
+    """Eq. (10) on TPU: kernel segment-sum then centroid matmul. x [K, B] -> [N, B]."""
+    n, c = centroids.shape
+    k, b = x.shape
+    bc = min(128, c)
+    c_pad = _round_up(c, bc)
+    bk = min(128, k)
+    k_pad = _round_up(k, bk)
+    bb = min(128, b)
+    b_pad = _round_up(b, bb)
+    lab = jnp.pad(labels.astype(jnp.int32), (0, k_pad - k), constant_values=c_pad - 1) \
+        if k_pad != k else labels.astype(jnp.int32)
+    xp = jnp.pad(x, ((0, k_pad - k), (0, b_pad - b))) if (k_pad != k or b_pad != b) else x
+    agg = cluster_segment_sum(lab, xp, num_clusters=c_pad,
+                              block_c=bc, block_k=bk, block_b=bb, interpret=interpret)
+    agg = agg[:c, :b]
+    return centroids.astype(jnp.float32) @ agg
+
+
+# ---------------------------------------------------------------------------
+# deployment byte-stream format (what actually sits in HBM)
+# ---------------------------------------------------------------------------
+
+
+def factor_to_stream(f) -> bytes:
+    """Serialize one LCC factor to the compact deployment stream.
+
+    Per nonzero term: int16 column index + int8 code (sign bit << 7 | (exp+32)).
+    Row boundaries via a uint8 per-row term count (rows have <= S terms).
+    This is the byte count the roofline's weight-streaming term uses.
+    """
+    import struct
+
+    idx = np.asarray(f.idx)
+    exp = np.asarray(f.exp)
+    sgn = np.asarray(f.sign)
+    out = bytearray()
+    out += struct.pack("<III", f.out_dim, f.in_dim, idx.shape[1])
+    for r in range(f.out_dim):
+        nz = np.nonzero(sgn[r])[0]
+        out.append(len(nz))
+        for s in nz:
+            out += struct.pack("<h", int(idx[r, s]))
+            code = (128 if sgn[r, s] < 0 else 0) | (int(exp[r, s]) + 32)
+            out += struct.pack("<B", code)
+    return bytes(out)
+
+
+def stream_to_factor(data: bytes):
+    """Inverse of factor_to_stream -> core.lcc.LCCFactor."""
+    import struct
+
+    from repro.core.lcc import LCCFactor
+
+    out_dim, in_dim, s_terms = struct.unpack_from("<III", data, 0)
+    off = 12
+    idx = np.zeros((out_dim, s_terms), np.int32)
+    exp = np.zeros((out_dim, s_terms), np.int8)
+    sgn = np.zeros((out_dim, s_terms), np.int8)
+    for r in range(out_dim):
+        n = data[off]
+        off += 1
+        for s in range(n):
+            (col,) = struct.unpack_from("<h", data, off)
+            code = data[off + 2]
+            off += 3
+            idx[r, s] = col
+            sgn[r, s] = -1 if code & 128 else 1
+            exp[r, s] = (code & 127) - 32
+    return LCCFactor(idx=idx, exp=exp, sign=sgn, in_dim=in_dim)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["lcc_factor_matmul_ref", "cluster_segment_sum_ref", "group_prox_ref",
+           "lcc_chain_apply_ref"]
+
+
+def lcc_factor_dense_ref(idx: jnp.ndarray, exp: jnp.ndarray, sign: jnp.ndarray, in_dim: int) -> jnp.ndarray:
+    """Densify a compact LCC factor: F[n, k] = sum_s sign*2^exp [idx==k]."""
+    n, s = idx.shape
+    val = sign.astype(jnp.float32) * jnp.exp2(exp.astype(jnp.float32))
+    onehot = jax.nn.one_hot(idx, in_dim, dtype=jnp.float32)  # [N, S, K]
+    return jnp.einsum("ns,nsk->nk", val, onehot)
+
+
+def lcc_factor_matmul_ref(idx, exp, sign, x) -> jnp.ndarray:
+    """y = F @ x via explicit densification (oracle for lcc_factor_matmul)."""
+    f = lcc_factor_dense_ref(idx, exp, sign, x.shape[0])
+    return f @ x.astype(jnp.float32)
+
+
+def lcc_chain_apply_ref(factors, x) -> jnp.ndarray:
+    """Apply a whole chain [(idx, exp, sign), ...] first-to-last."""
+    for idx, exp, sign in factors:
+        x = lcc_factor_matmul_ref(idx, exp, sign, x)
+    return x
+
+
+def cluster_segment_sum_ref(labels, x, num_clusters: int) -> jnp.ndarray:
+    """agg[C, B] = segment_sum(x, labels) (oracle for cluster_segment_sum)."""
+    return jax.ops.segment_sum(x.astype(jnp.float32), labels, num_segments=num_clusters)
+
+
+def group_prox_ref(a, thresh) -> jnp.ndarray:
+    """Row block soft threshold (oracle for group_prox)."""
+    a32 = a.astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(a32 * a32, axis=1, keepdims=True))
+    scale = jnp.maximum(1.0 - thresh / jnp.maximum(norm, 1e-12), 0.0)
+    return (scale * a32).astype(a.dtype)

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 (512 chips, 2 pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+class HW:
+    """TPU v5e-like hardware constants for the roofline (per chip)."""
+
+    PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+    HBM_BW = 819e9  # B/s
+    ICI_BW = 50e9  # B/s per link (the task-specified accounting)
+    HBM_BYTES = 16 * 2**30

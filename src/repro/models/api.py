@@ -1,0 +1,61 @@
+"""Single dispatch surface for every architecture family.
+
+All launchers, trainers and the dry-run go through these five functions so a
+new family only has to plug in here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell
+
+from . import transformer, whisper
+
+__all__ = ["init_params", "abstract_params", "train_loss", "prefill", "decode",
+           "init_decode_state", "abstract_decode_state"]
+
+
+def init_params(key, cfg: ArchConfig):
+    if cfg.enc_layers > 0:
+        return whisper.init_params(key, cfg)
+    return transformer.init_params(key, cfg)
+
+
+def abstract_params(cfg: ArchConfig):
+    """ShapeDtypeStruct pytree — no allocation (dry-run contract)."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def train_loss(params, cfg: ArchConfig, batch, *, unroll: bool = False):
+    if cfg.enc_layers > 0:
+        return whisper.loss_fn(params, cfg, batch, unroll=unroll)
+    return transformer.loss_fn(params, cfg, batch, unroll=unroll)
+
+
+def prefill(params, cfg: ArchConfig, batch, *, unroll: bool = False,
+            collect_cache: bool = False):
+    """Returns final hidden states (and caches when collect_cache)."""
+    if cfg.enc_layers > 0:
+        return whisper.encode(params, cfg, batch["frames"], unroll=unroll), None
+    h, cache = transformer.forward(
+        params, cfg, tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+        positions3=batch.get("positions3"), unroll=unroll, collect_cache=collect_cache)
+    return h, cache
+
+
+def decode(params, cfg: ArchConfig, state, token, pos, *, unroll: bool = False):
+    if cfg.enc_layers > 0:
+        return whisper.decode_step(params, cfg, state, token, pos, unroll=unroll)
+    return transformer.decode_step(params, cfg, state, token, pos, unroll=unroll)
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, smax: int):
+    if cfg.enc_layers > 0:
+        return whisper.init_decode_state(cfg, batch, enc_len=smax)
+    return transformer.init_decode_state(cfg, batch, smax)
+
+
+def abstract_decode_state(cfg: ArchConfig, cell: ShapeCell):
+    return jax.eval_shape(
+        lambda: init_decode_state(cfg, cell.global_batch, cell.seq_len))

@@ -1,0 +1,318 @@
+"""Attention: GQA (full / sliding-window / bidirectional / cross) and MLA.
+
+Prefill uses query-chunked attention (memory O(S * chunk) instead of O(S^2))
+with two lowering modes:
+  * ``unroll_chunks=False`` — lax.scan over chunks (compact HLO; production).
+  * ``unroll_chunks=True``  — static python loop; used by the roofline pass
+    (while-bodies are undercounted by HLO cost analysis, see DESIGN.md Sec. 6)
+    and enables *causal chunk skipping*: a query chunk statically attends only
+    to keys at positions <= its end, which removes the upper-triangle FLOPs —
+    one of the beyond-paper optimizations measured in EXPERIMENTS.md §Perf.
+
+KV caches are plain pytrees. Sliding-window attention uses a ring buffer of
+size ``window`` so the 500k-token decode cell runs with bounded memory.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_shard import constrain
+
+from .layers import apply_mrope, apply_rope, dense_init, linear
+
+__all__ = [
+    "AttnParams",
+    "init_attention",
+    "attention_prefill",
+    "attention_decode",
+    "KVCache",
+    "init_kv_cache",
+    "init_mla",
+    "mla_prefill",
+    "mla_decode",
+    "MLACache",
+]
+
+_NEG = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # [B, Smax, Hkv, Dh]  (ring buffer if windowed)
+    v: jnp.ndarray  # [B, Smax, Hkv, Dh]
+    kpos: jnp.ndarray  # [B, Smax] absolute positions (-1 = empty)
+
+
+def init_kv_cache(batch: int, smax: int, n_kv: int, head_dim: int, dtype) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, smax, n_kv, head_dim), dtype),
+        v=jnp.zeros((batch, smax, n_kv, head_dim), dtype),
+        kpos=jnp.full((batch, smax), -1, jnp.int32),
+    )
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                   dtype, qkv_bias: bool = False):
+    ks = jax.random.split(key, 4)
+    return {
+        "q": dense_init(ks[0], d_model, n_heads * head_dim, dtype, bias=qkv_bias),
+        "k": dense_init(ks[1], d_model, n_kv * head_dim, dtype, bias=qkv_bias),
+        "v": dense_init(ks[2], d_model, n_kv * head_dim, dtype, bias=qkv_bias),
+        "o": dense_init(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+
+
+def _project_qkv(p, x, n_heads, n_kv, head_dim):
+    b, s, _ = x.shape
+    q = linear(p["q"], x).reshape(b, s, n_heads, head_dim)
+    k = linear(p["k"], x).reshape(b, s, n_kv, head_dim)
+    v = linear(p["v"], x).reshape(b, s, n_kv, head_dim)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask):
+    """q [B,Sq,Hkv,G,D], k/v [B,Sk,Hkv,D], additive mask [B,1,1,Sq,Sk] or None."""
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if mask is not None:
+        scores = scores + mask
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out
+
+
+def attention_prefill(
+    p, x, positions, *, n_heads: int, n_kv: int, head_dim: int,
+    causal: bool = True, window: int | None = None,
+    rope_theta: float | None = 10000.0, mrope_sections=None, mrope_positions=None,
+    q_chunk: int = 1024, unroll_chunks: bool = False, causal_skip: bool = False,
+    kv_x: jnp.ndarray | None = None,
+):
+    """Returns (out [B,S,d_model], k, v). ``kv_x`` switches to cross-attention."""
+    b, s, _ = x.shape
+    g = n_heads // n_kv
+    q = constrain(linear(p["q"], x).reshape(b, s, n_heads, head_dim),
+                  "batch", None, "model", None)
+    src = x if kv_x is None else kv_x
+    sk = src.shape[1]
+    k = constrain(linear(p["k"], src).reshape(b, sk, n_kv, head_dim),
+                  "batch", None, "model", None)
+    v = constrain(linear(p["v"], src).reshape(b, sk, n_kv, head_dim),
+                  "batch", None, "model", None)
+
+    if mrope_sections is not None:
+        q = apply_mrope(q, mrope_positions, mrope_sections)
+        k = apply_mrope(k, mrope_positions, mrope_sections)
+    elif rope_theta is not None:
+        kpos = positions if kv_x is None else jnp.broadcast_to(jnp.arange(sk)[None], (b, sk))
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, kpos, rope_theta)
+
+    qg = q.reshape(b, s, n_kv, g, head_dim)
+    kpos_all = jnp.arange(sk)
+
+    def chunk_out(q_c, qpos_c, k_c, v_c, kpos_c):
+        if causal and kv_x is None:
+            m = (kpos_c[None, :] <= qpos_c[:, None]).astype(jnp.float32)
+            if window is not None:
+                m = m * (kpos_c[None, :] > qpos_c[:, None] - window)
+            mask = jnp.where(m > 0, 0.0, _NEG)[None, None, None]
+        else:
+            mask = None
+        return _sdpa(q_c, k_c, v_c, mask)
+
+    n_chunks = max(1, s // q_chunk) if s % q_chunk == 0 else 1
+    if n_chunks == 1:
+        out = chunk_out(qg, positions[0], k, v, kpos_all)
+    elif unroll_chunks:
+        outs = []
+        cq = s // n_chunks
+        for i in range(n_chunks):
+            q_c = qg[:, i * cq:(i + 1) * cq]
+            qpos_c = positions[0, i * cq:(i + 1) * cq]
+            # static causal/window chunk skipping: only keys that can be seen
+            lo, hi = 0, sk
+            if causal_skip and causal and kv_x is None:
+                hi = min(sk, (i + 1) * cq)
+                if window is not None:
+                    lo = max(0, i * cq - int(window))
+            outs.append(chunk_out(q_c, qpos_c, k[:, lo:hi], v[:, lo:hi], kpos_all[lo:hi]))
+        out = jnp.concatenate(outs, axis=1)
+    else:
+        cq = s // n_chunks
+        qg_r = qg.reshape(b, n_chunks, cq, n_kv, g, head_dim)
+        qpos_r = positions[0].reshape(n_chunks, cq)
+
+        def body(_, qc):
+            q_c, qpos_c = qc
+            return None, chunk_out(jnp.moveaxis(q_c, 0, 0), qpos_c, k, v, kpos_all)
+
+        _, outs = jax.lax.scan(body, None, (jnp.moveaxis(qg_r, 1, 0), qpos_r))
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, s, n_kv, g, head_dim)
+        out = out.reshape(b, s, n_heads * head_dim)
+        y = constrain(linear(p["o"], out.astype(x.dtype)), "batch", None, None)
+        return y, k, v
+
+    out = out.reshape(b, s, n_heads * head_dim)
+    y = constrain(linear(p["o"], out.astype(x.dtype)), "batch", None, None)
+    return y, k, v
+
+
+def attention_decode(
+    p, x, cache: KVCache, pos, *, n_heads: int, n_kv: int, head_dim: int,
+    window: int | None = None, rope_theta: float | None = 10000.0,
+    mrope_sections=None, mrope_positions=None, cross: bool = False,
+):
+    """One-token decode. x [B,1,d]; pos [B] absolute position of this token.
+
+    Returns (out [B,1,d], new_cache). With ``window`` the cache is a ring
+    buffer (slot = pos % window). ``cross=True`` reads a static cross-attention
+    cache (no update, no causal mask)."""
+    b = x.shape[0]
+    q = constrain(linear(p["q"], x).reshape(b, 1, n_heads, head_dim),
+                  "batch", None, "model", None)
+    if mrope_sections is not None:
+        q = apply_mrope(q, mrope_positions, mrope_sections)
+    elif rope_theta is not None:
+        q = apply_rope(q, pos[:, None], rope_theta)
+
+    if cross:
+        new_cache = cache
+    else:
+        k_new = linear(p["k"], x).reshape(b, 1, n_kv, head_dim)
+        v_new = linear(p["v"], x).reshape(b, 1, n_kv, head_dim)
+        if rope_theta is not None and mrope_sections is None:
+            k_new = apply_rope(k_new, pos[:, None], rope_theta)
+        elif mrope_sections is not None:
+            k_new = apply_mrope(k_new, mrope_positions, mrope_sections)
+        smax = cache.k.shape[1]
+        slot = pos % smax if window is not None else pos
+        onehot = jax.nn.one_hot(slot, smax, dtype=cache.k.dtype)  # [B, Smax]
+        k = cache.k * (1 - onehot)[..., None, None] + onehot[..., None, None] * k_new
+        v = cache.v * (1 - onehot)[..., None, None] + onehot[..., None, None] * v_new
+        kpos = jnp.where(onehot > 0, pos[:, None], cache.kpos)
+        new_cache = KVCache(k=k, v=v, kpos=kpos)
+
+    k, v, kpos = new_cache.k, new_cache.v, new_cache.kpos
+    g = n_heads // n_kv
+    qg = q.reshape(b, 1, n_kv, g, head_dim)
+    if cross:
+        mask = None
+    else:
+        valid = (kpos >= 0) & (kpos <= pos[:, None])
+        if window is not None:
+            valid = valid & (kpos > (pos[:, None] - window))
+        mask = jnp.where(valid, 0.0, _NEG)[:, None, None, None, :]  # [B,1,1,1,Smax]
+    out = _sdpa(qg, k, v, mask)
+    out = out.reshape(b, 1, n_heads * head_dim)
+    return linear(p["o"], out.astype(x.dtype)), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): low-rank compressed KV cache
+# ---------------------------------------------------------------------------
+
+
+class MLACache(NamedTuple):
+    c_kv: jnp.ndarray  # [B, Smax, dc]     compressed KV latents
+    k_rope: jnp.ndarray  # [B, Smax, Dr]   shared rotary key branch
+    kpos: jnp.ndarray  # [B, Smax]
+
+
+def init_mla(key, d_model: int, n_heads: int, *, kv_lora: int, qk_nope: int,
+             qk_rope: int, v_dim: int, dtype):
+    ks = jax.random.split(key, 6)
+    return {
+        "q": dense_init(ks[0], d_model, n_heads * (qk_nope + qk_rope), dtype),
+        "dkv": dense_init(ks[1], d_model, kv_lora, dtype),
+        "kr": dense_init(ks[2], d_model, qk_rope, dtype),
+        "uk": dense_init(ks[3], kv_lora, n_heads * qk_nope, dtype),
+        "uv": dense_init(ks[4], kv_lora, n_heads * v_dim, dtype),
+        "o": dense_init(ks[5], n_heads * v_dim, d_model, dtype),
+    }
+
+
+def _mla_qkv(p, x, c_kv, k_rope_src, positions, kpositions, n_heads, qk_nope, qk_rope, v_dim,
+             rope_theta):
+    b, s, _ = x.shape
+    sk = c_kv.shape[1]
+    q = linear(p["q"], x).reshape(b, s, n_heads, qk_nope + qk_rope)
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+    k_nope = constrain(linear(p["uk"], c_kv).reshape(b, sk, n_heads, qk_nope),
+                       "batch", None, "model", None)
+    v = constrain(linear(p["uv"], c_kv).reshape(b, sk, n_heads, v_dim),
+                  "batch", None, "model", None)
+    k_rope = apply_rope(k_rope_src[:, :, None, :], kpositions, rope_theta)  # [B,Sk,1,Dr]
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, sk, n_heads, qk_rope))], axis=-1)
+    return q_full, k_full, v
+
+
+def mla_prefill(p, x, positions, *, n_heads, kv_lora, qk_nope, qk_rope, v_dim,
+                rope_theta=10000.0, q_chunk: int = 1024, unroll_chunks: bool = False,
+                causal_skip: bool = False):
+    b, s, _ = x.shape
+    c_kv = linear(p["dkv"], x)  # [B,S,dc]
+    k_rope_src = linear(p["kr"], x)  # [B,S,Dr]
+    q, k, v = _mla_qkv(p, x, c_kv, k_rope_src, positions, positions, n_heads,
+                       qk_nope, qk_rope, v_dim, rope_theta)
+    # MLA heads are full multi-head (n_kv == n_heads): reuse the GQA kernel path
+    qg = q.reshape(b, s, n_heads, 1, qk_nope + qk_rope)
+    kpos = jnp.arange(s)
+
+    def chunk_out(q_c, qpos_c, k_c, v_c, kpos_c):
+        m = (kpos_c[None, :] <= qpos_c[:, None])
+        mask = jnp.where(m, 0.0, _NEG)[None, None, None]
+        return _sdpa(q_c, k_c, v_c, mask)
+
+    n_chunks = max(1, s // q_chunk) if s % q_chunk == 0 else 1
+    if n_chunks == 1:
+        out = chunk_out(qg, positions[0], k, v, kpos)
+    elif unroll_chunks:
+        cq = s // n_chunks
+        outs = []
+        for i in range(n_chunks):
+            hi = (i + 1) * cq if causal_skip else s
+            outs.append(chunk_out(qg[:, i * cq:(i + 1) * cq], positions[0, i * cq:(i + 1) * cq],
+                                  k[:, :hi], v[:, :hi], kpos[:hi]))
+        out = jnp.concatenate(outs, axis=1)
+    else:
+        cq = s // n_chunks
+        qg_r = jnp.moveaxis(qg.reshape(b, n_chunks, cq, n_heads, 1, -1), 1, 0)
+        qpos_r = positions[0].reshape(n_chunks, cq)
+
+        def body(_, qc):
+            q_c, qpos_c = qc
+            return None, chunk_out(q_c, qpos_c, k, v, kpos)
+
+        _, outs = jax.lax.scan(body, None, (qg_r, qpos_r))
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, s, n_heads, 1, v_dim)
+
+    out = out.reshape(b, s, n_heads * v_dim)
+    return linear(p["o"], out.astype(x.dtype)), c_kv, k_rope_src
+
+
+def mla_decode(p, x, cache: MLACache, pos, *, n_heads, kv_lora, qk_nope, qk_rope,
+               v_dim, rope_theta=10000.0):
+    b = x.shape[0]
+    smax = cache.c_kv.shape[1]
+    c_new = linear(p["dkv"], x)  # [B,1,dc]
+    kr_new = linear(p["kr"], x)
+    onehot = jax.nn.one_hot(pos, smax, dtype=cache.c_kv.dtype)
+    c_kv = cache.c_kv * (1 - onehot)[..., None] + onehot[..., None] * c_new
+    k_rope = cache.k_rope * (1 - onehot)[..., None] + onehot[..., None] * kr_new
+    kpos = jnp.where(onehot > 0, pos[:, None], cache.kpos)
+    new_cache = MLACache(c_kv=c_kv, k_rope=k_rope, kpos=kpos)
+
+    kpositions = jnp.maximum(kpos, 0)
+    q, k, v = _mla_qkv(p, x, c_kv, k_rope, pos[:, None], kpositions, n_heads,
+                       qk_nope, qk_rope, v_dim, rope_theta)
+    qg = q.reshape(b, 1, n_heads, 1, qk_nope + qk_rope)
+    valid = (kpos >= 0) & (kpos <= pos[:, None])
+    mask = jnp.where(valid, 0.0, _NEG)[:, None, None, None, :]
+    out = _sdpa(qg, k, v, mask)
+    out = out.reshape(b, 1, n_heads * v_dim)
+    return linear(p["o"], out.astype(x.dtype)), new_cache

@@ -1,0 +1,120 @@
+"""Shared model primitives: norms, rotary embeddings, FFNs, initializers.
+
+Pure-functional JAX; parameters are nested dicts of arrays. Compute dtype and
+accumulation dtype are explicit everywhere (bf16 compute / f32 accumulation by
+default, matching the TPU deployment target).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.act_shard import constrain
+
+__all__ = [
+    "dense_init",
+    "linear",
+    "rms_norm",
+    "layer_norm",
+    "non_parametric_ln",
+    "apply_rope",
+    "apply_mrope",
+    "swiglu",
+    "gelu_mlp",
+]
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: float | None = None,
+               bias: bool = False):
+    """Truncated-normal fan-in init (the standard for all projections here)."""
+    if scale is None:
+        scale = 1.0 / np.sqrt(in_dim)
+    p = {"w": (jax.random.truncated_normal(key, -2, 2, (in_dim, out_dim)) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * w + b
+
+
+def non_parametric_ln(x, eps: float = 1e-5):
+    """OLMo-style LayerNorm without learnable affine parameters."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(dt)
+
+
+def _rope_sincos(positions, dim: int, theta: float):
+    """positions [...]: sin/cos [..., dim/2] in f32."""
+    half = dim // 2
+    freqs = jnp.exp(-np.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., half]
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """Rotary embedding. x [B, S, H, D], positions [B, S] (absolute)."""
+    d = x.shape[-1]
+    sin, cos = _rope_sincos(positions, d, theta)  # [B, S, d/2]
+    sin = sin[:, :, None, :]
+    cos = cos[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections: tuple[int, int, int], theta: float = 10000.0):
+    """Qwen2-VL multimodal RoPE. x [B, S, H, D], positions3 [3, B, S]
+    (temporal / height / width position ids); ``sections`` split D/2 rotary
+    frequencies among the three axes (sum(sections) == D // 2)."""
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = jnp.exp(-np.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    # choose which positional axis drives each frequency band
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=half)  # [half]
+    pos = positions3.astype(jnp.float32)  # [3, B, S]
+    pos_sel = pos[sec_id]  # [half, B, S] — gather the driving axis per band
+    ang = jnp.moveaxis(pos_sel, 0, -1) * freqs  # [B, S, half]
+    sin, cos = jnp.sin(ang)[:, :, None, :], jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(p, x):
+    """SwiGLU FFN: down( silu(gate(x)) * up(x) ). TP: d_ff sharded on "model"."""
+    g = constrain(linear(p["gate"], x), "batch", None, "model")
+    u = constrain(linear(p["up"], x), "batch", None, "model")
+    y = linear(p["down"], jax.nn.silu(g) * u)
+    return constrain(y, "batch", None, None)
+
+
+def gelu_mlp(p, x):
+    """Two-layer GELU MLP (whisper-style). TP: d_ff sharded on "model"."""
+    h = constrain(linear(p["fc1"], x), "batch", None, "model")
+    return constrain(linear(p["fc2"], jax.nn.gelu(h)), "batch", None, None)

@@ -1,0 +1,160 @@
+"""Mamba2 (SSD) layer: chunked state-space duality scan + recurrent decode.
+
+Faithful to the SSD formulation (Dao & Gu 2024): per-head scalar decay
+a_t = exp(dt_t * A_h) with A_h = -exp(A_log_h); within a chunk the output is an
+attention-like masked product, across chunks a small state [H, N, P] is carried.
+``unroll_chunks=True`` lowers the chunk loop as a static python loop for the
+roofline cost pass (see attention.py for why).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_shard import constrain
+
+from .layers import dense_init, linear, rms_norm
+
+__all__ = ["init_mamba2", "mamba2_prefill", "mamba2_decode", "Mamba2State"]
+
+
+class Mamba2State(NamedTuple):
+    ssm: jnp.ndarray  # [B, H, N, P]
+    conv: jnp.ndarray  # [B, d_conv_in, K-1]  (last K-1 inputs of the causal conv)
+
+
+def init_mamba2(key, d_model: int, *, d_inner: int, d_state: int, head_dim: int,
+                d_conv: int, dtype):
+    h = d_inner // head_dim
+    conv_dim = d_inner + 2 * d_state  # x, B, C go through the conv
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * d_inner + 2 * d_state + h, dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv_dim, d_conv)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),  # A = -exp(A_log) = -1 at init
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(ks[2], d_inner, d_model, dtype),
+    }
+
+
+def _split_proj(p, x, d_inner, d_state, h):
+    zxbcdt = constrain(linear(p["in_proj"], x), "batch", None, None)
+    z, xc, b_in, c_in, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + d_state, 2 * d_inner + 2 * d_state], axis=-1
+    )
+    return z, xc, b_in, c_in, dt
+
+
+def _causal_conv(xbc, w, b, prev=None):
+    """Depthwise causal conv over time. xbc [B, S, Cd], w [Cd, K]."""
+    k = w.shape[1]
+    x = jnp.moveaxis(xbc, -1, 1)  # [B, Cd, S]
+    if prev is None:
+        x = jnp.pad(x, ((0, 0), (0, 0), (k - 1, 0)))
+    else:
+        x = jnp.concatenate([prev.astype(x.dtype), x], axis=-1)
+    out = jax.lax.conv_general_dilated(
+        x[:, :, None, :], w[:, None, None, :], (1, 1), "VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"), feature_group_count=w.shape[0],
+    )[:, :, 0, :]
+    out = out + b[None, :, None]
+    return jnp.moveaxis(out, 1, -1)  # [B, S', Cd]
+
+
+def mamba2_prefill(p, x, *, d_inner: int, d_state: int, head_dim: int, d_conv: int,
+                   chunk: int = 256, unroll_chunks: bool = False):
+    """x [B, S, d_model] -> (y [B, S, d_model], final Mamba2State)."""
+    b, s, _ = x.shape
+    h = d_inner // head_dim
+    n, pdim = d_state, head_dim
+    z, xc, b_in, c_in, dt = _split_proj(p, x, d_inner, d_state, h)
+    conv_in = jnp.concatenate([xc, b_in, c_in], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xs, b_in, c_in = jnp.split(conv_out, [d_inner, d_inner + d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    a = -jnp.exp(p["A_log"])  # [H]
+    loga = dt * a[None, None, :]  # log decay (negative)  [B,S,H]
+    xh = xs.reshape(b, s, h, pdim).astype(jnp.float32) * dt[..., None]  # dt folded in
+    bh = b_in.astype(jnp.float32)  # [B,S,N] (n_groups=1, broadcast over heads)
+    ch = c_in.astype(jnp.float32)
+
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+    xh, bh, ch, loga = (t.reshape(b, nc, q, *t.shape[2:]) for t in (xh, bh, ch, loga))
+
+    lcum = jnp.cumsum(loga, axis=2)  # [B,nc,q,H]
+    ltot = lcum[:, :, -1]  # [B,nc,H]
+
+    mask = jnp.tril(jnp.ones((q, q), bool))
+
+    def chunk_math(xc_, bc_, cc_, lc_, state):
+        # intra: y[t] = sum_{s<=t} (C_t.B_s) exp(l_t - l_s) x_s
+        cb = jnp.einsum("btn,bsn->bts", cc_, bc_)  # [B,q,q]
+        dec = jnp.exp(lc_[:, :, None, :] - lc_[:, None, :, :])  # [B,t,s,H]
+        dec = jnp.where(mask[None, :, :, None], dec, 0.0)
+        y = jnp.einsum("bts,btsh,bshp->bthp", cb, dec, xc_)
+        # inter: y[t] += C_t . state * exp(l_t)
+        y = y + jnp.einsum("btn,bhnp,bth->bthp", cc_, state, jnp.exp(lc_))
+        # state' = exp(l_q) state + sum_s exp(l_q - l_s) B_s x_s
+        ltot_ = lc_[:, -1]  # [B,H]
+        snew = jnp.einsum("bsn,bshp,bsh->bhnp", bc_, xc_, jnp.exp(ltot_[:, None] - lc_))
+        state = state * jnp.exp(ltot_)[:, :, None, None] + snew
+        return y, state
+
+    state0 = jnp.zeros((b, h, n, pdim), jnp.float32)
+    if unroll_chunks:
+        state = state0
+        ys = []
+        for i in range(nc):
+            y, state = chunk_math(xh[:, i], bh[:, i], ch[:, i], lcum[:, i], state)
+            ys.append(y)
+        y = jnp.stack(ys, axis=1)
+    else:
+        def body(state, args):
+            y, state = chunk_math(*args, state)
+            return state, y
+
+        state, y = jax.lax.scan(
+            body, state0,
+            (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(bh, 1, 0), jnp.moveaxis(ch, 1, 0),
+             jnp.moveaxis(lcum, 1, 0)),
+        )
+        y = jnp.moveaxis(y, 0, 1)
+
+    y = y.reshape(b, s, h, pdim) + p["D"][None, None, :, None] * xs.reshape(b, s, h, pdim)
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    conv_tail = jnp.moveaxis(conv_in[:, s - (d_conv - 1):], 1, 2) if s >= d_conv - 1 else \
+        jnp.pad(jnp.moveaxis(conv_in, 1, 2), ((0, 0), (0, 0), (d_conv - 1 - s, 0)))
+    return linear(p["out_proj"], y), Mamba2State(ssm=state, conv=conv_tail)
+
+
+def mamba2_decode(p, x, state: Mamba2State, *, d_inner: int, d_state: int,
+                  head_dim: int, d_conv: int):
+    """One-token step. x [B, 1, d_model] -> (y [B, 1, d_model], new state)."""
+    b = x.shape[0]
+    h = d_inner // head_dim
+    z, xc, b_in, c_in, dt = _split_proj(p, x, d_inner, d_state, h)
+    conv_in = jnp.concatenate([xc, b_in, c_in], axis=-1)  # [B,1,Cd]
+    win = jnp.concatenate([state.conv, jnp.moveaxis(conv_in, 1, 2)], axis=-1)  # [B,Cd,K]
+    conv_out = jnp.einsum("bck,ck->bc", win.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))[:, None, :]
+    xs, b_i, c_i = jnp.split(conv_out, [d_inner, d_inner + d_state], axis=-1)
+
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = jnp.exp(dtv * (-jnp.exp(p["A_log"])))  # [B,H]
+    xhp = xs[:, 0].reshape(b, h, head_dim).astype(jnp.float32) * dtv[..., None]
+    ssm = state.ssm * a[:, :, None, None] + jnp.einsum("bn,bhp->bhnp", b_i[:, 0], xhp)
+    y = jnp.einsum("bn,bhnp->bhp", c_i[:, 0], ssm)
+    y = y + p["D"][None, :, None] * xs[:, 0].reshape(b, h, head_dim)
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    return linear(p["out_proj"], y), Mamba2State(ssm=ssm, conv=win[:, :, 1:])

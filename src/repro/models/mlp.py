@@ -1,0 +1,48 @@
+"""The paper's MLP (Sec. IV-A): one hidden layer of width 300, trained with
+group-lasso regularization on the first layer.  Pure JAX; parameters double as
+``CompressibleDense`` units for the Algorithm-1 pipeline."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_mlp", "mlp_forward", "mlp_loss", "mlp_accuracy"]
+
+
+def init_mlp(key, in_dim: int = 784, hidden: int = 300, classes: int = 10,
+             dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    s1 = (2.0 / in_dim) ** 0.5
+    s2 = (2.0 / hidden) ** 0.5
+    return {
+        "fc1": {"w": (jax.random.normal(k1, (hidden, in_dim)) * s1).astype(dtype),
+                "b": jnp.zeros((hidden,), dtype)},
+        "fc2": {"w": (jax.random.normal(k2, (classes, hidden)) * s2).astype(dtype),
+                "b": jnp.zeros((classes,), dtype)},
+    }
+
+
+def mlp_forward(params, x):
+    """x [B, in_dim] -> logits [B, classes]. Weights act as y = W x (paper layout)."""
+    h = jax.nn.relu(x @ params["fc1"]["w"].T + params["fc1"]["b"])
+    return h @ params["fc2"]["w"].T + params["fc2"]["b"]
+
+
+def mlp_forward_custom(params, x, fc1_matvec=None):
+    """Forward with a replaceable first-layer matvec (compressed inference)."""
+    if fc1_matvec is None:
+        return mlp_forward(params, x)
+    h = jax.nn.relu(fc1_matvec(x) + params["fc1"]["b"])
+    return h @ params["fc2"]["w"].T + params["fc2"]["b"]
+
+
+def mlp_loss(params, x, y):
+    logits = mlp_forward(params, x)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return (lse - gold).mean()
+
+
+def mlp_accuracy(params, x, y, fc1_matvec=None):
+    logits = mlp_forward_custom(params, x, fc1_matvec)
+    return (jnp.argmax(logits, -1) == y).mean()

@@ -1,0 +1,231 @@
+"""Mixture-of-experts FFN with capacity-bounded scatter dispatch (GShard-style).
+
+Tokens are routed top-k, assigned a rank within their expert's queue, and
+scattered into a [E, C, d] buffer (mode='drop' beyond capacity) so expert
+computation is a dense batched einsum — EP-shardable over the expert axis and
+faithful to the active-FLOP count (6 * N_active * D), unlike soft dispatch.
+
+Shared (always-on) experts are folded into one SwiGLU with concatenated ff
+(mathematically identical: the down projection is linear).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_shard import constrain, get_mesh
+
+from .layers import dense_init, swiglu
+
+__all__ = ["init_moe", "moe_ffn", "router_aux_losses"]
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, n_shared: int, dtype):
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / jnp.sqrt(d_model).astype(jnp.float32)
+    p = {
+        "router": (jax.random.truncated_normal(ks[0], -2, 2, (d_model, n_experts)) * scale
+                   ).astype(jnp.float32),  # router stays f32 for stable top-k
+        "gate": (jax.random.truncated_normal(ks[1], -2, 2, (n_experts, d_model, d_ff)) * scale).astype(dtype),
+        "up": (jax.random.truncated_normal(ks[2], -2, 2, (n_experts, d_model, d_ff)) * scale).astype(dtype),
+        "down": (jax.random.truncated_normal(ks[3], -2, 2, (n_experts, d_ff, d_model))
+                 * (1.0 / jnp.sqrt(d_ff).astype(jnp.float32))).astype(dtype),
+    }
+    if n_shared > 0:
+        p["shared"] = {
+            "gate": dense_init(jax.random.fold_in(ks[4], 0), d_model, n_shared * d_ff, dtype),
+            "up": dense_init(jax.random.fold_in(ks[4], 1), d_model, n_shared * d_ff, dtype),
+            "down": dense_init(jax.random.fold_in(ks[4], 2), n_shared * d_ff, d_model, dtype),
+        }
+    return p
+
+
+def moe_ffn(p, x, *, n_experts: int, top_k: int, capacity_factor: float = 1.25,
+            norm_topk: bool = True, min_capacity: int = 4):
+    """x [B, S, d] -> (y [B, S, d], aux dict with router stats)."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = xt.astype(jnp.float32) @ p["router"]  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, sel = jax.lax.top_k(probs, top_k)  # [T, k]
+    if norm_topk:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(max(min_capacity, round(t * top_k * capacity_factor / n_experts)))
+    # rank of each (token, slot) within its expert queue
+    sel_oh = jax.nn.one_hot(sel, n_experts, dtype=jnp.int32)  # [T, k, E]
+    flat_oh = sel_oh.reshape(t * top_k, n_experts)
+    ranks = (jnp.cumsum(flat_oh, axis=0) - flat_oh).reshape(t, top_k, n_experts)
+    rank = jnp.sum(ranks * sel_oh, axis=-1)  # [T, k]
+
+    keep = rank < cap
+    slot = sel * cap + jnp.minimum(rank, cap - 1)  # [T, k] flat index into E*C
+    slot = jnp.where(keep, slot, n_experts * cap)  # OOB => dropped by scatter
+
+    buf = jnp.zeros((n_experts * cap, d), x.dtype)
+    for j in range(top_k):  # k small static scatters of [T, d]
+        buf = buf.at[slot[:, j]].add(xt, mode="drop")
+    buf = constrain(buf.reshape(n_experts, cap, d), "model", None, None)
+
+    h_gate = jnp.einsum("ecd,edf->ecf", buf, p["gate"])
+    h_up = jnp.einsum("ecd,edf->ecf", buf, p["up"])
+    mesh = get_mesh()
+    ep = (mesh is not None and "model" in mesh.shape
+          and n_experts % mesh.shape["model"] == 0 and n_experts >= mesh.shape["model"])
+    if ep:  # EP: experts across "model"
+        h_gate = constrain(h_gate, "model", None, None)
+        h_up = constrain(h_up, "model", None, None)
+    else:  # TP within expert: shard expert d_ff
+        h_gate = constrain(h_gate, None, None, "model")
+        h_up = constrain(h_up, None, None, "model")
+    h = jax.nn.silu(h_gate) * h_up
+    out_buf = constrain(jnp.einsum("ecf,efd->ecd", h, p["down"]),
+                        "model", None, None).reshape(n_experts * cap, d)
+
+    y = jnp.zeros((t, d), x.dtype)
+    for j in range(top_k):
+        gathered = jnp.take(out_buf, jnp.minimum(slot[:, j], n_experts * cap - 1), axis=0)
+        w = (gates[:, j] * keep[:, j]).astype(x.dtype)[:, None]
+        y = y + w * gathered
+
+    y = constrain(y, "batch", None)
+    if "shared" in p:
+        y = y + swiglu(p["shared"], xt)
+
+    aux = {"router_probs_mean": probs.mean(0), "dropped_frac":
+           1.0 - keep.mean(), "sel": sel}
+    return y.reshape(b, s, d), aux
+
+
+def moe_ffn_manual(p, x, *, n_experts: int, top_k: int,
+                   capacity_factor: float = 1.25, norm_topk: bool = True,
+                   min_capacity: int = 4, mesh=None):
+    """MoE block as a fully-manual shard_map: local dispatch, EP or
+    TP-within-expert compute, one psum over "model" for combine.
+
+    Rationale (measured, EXPERIMENTS.md §Perf iteration 3): under pure GSPMD
+    the capacity scatter/gather cannot be partitioned along tokens, so XLA
+    replicates the [E*C, d] buffer and all-reduces hundreds of GB per layer.
+    Making dispatch local to each (pod, data) shard removes those collectives;
+    the surviving communication is the combine psum over "model" (plus the
+    FSDP weight gathers at the shard_map boundary).
+    """
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    if mesh is None:
+        mesh = get_mesh()
+    b, s, d = x.shape
+    t = b * s
+    if mesh is None:
+        return moe_ffn(p, x, n_experts=n_experts, top_k=top_k,
+                       capacity_factor=capacity_factor, norm_topk=norm_topk,
+                       min_capacity=min_capacity)
+    msize = mesh.shape.get("model", 1)
+    token_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    tshard = int(np.prod([mesh.shape[a] for a in token_axes])) if token_axes else 1
+    if t % max(tshard, 1):
+        return moe_ffn(p, x, n_experts=n_experts, top_k=top_k,
+                       capacity_factor=capacity_factor, norm_topk=norm_topk,
+                       min_capacity=min_capacity)
+    ep = n_experts % msize == 0 and n_experts >= msize
+    e_loc = n_experts // msize if ep else n_experts
+
+    def route_local(xt, router):
+        tl = xt.shape[0]
+        logits = xt.astype(jnp.float32) @ router
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, sel = jax.lax.top_k(probs, top_k)
+        if norm_topk:
+            gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+        cap = int(max(min_capacity, round(t // max(tshard, 1) * top_k
+                                          * capacity_factor / n_experts)))
+        sel_oh = jax.nn.one_hot(sel, n_experts, dtype=jnp.int32)
+        flat_oh = sel_oh.reshape(tl * top_k, n_experts)
+        ranks = (jnp.cumsum(flat_oh, axis=0) - flat_oh).reshape(tl, top_k, n_experts)
+        rank = jnp.sum(ranks * sel_oh, axis=-1)
+        keep = rank < cap
+        return gates, sel, rank, keep, cap
+
+    def body(xt, router, gate, up, down, sg, su, sd):
+        # xt [T_loc, d]; weight args are this shard's slices (EP: expert
+        # slice; TP: d_ff slice). Local except the final psum over "model".
+        gates, sel, rank, keep, cap = route_local(xt, router)
+        slot = sel * cap + jnp.minimum(rank, cap - 1)
+        slot = jnp.where(keep, slot, n_experts * cap)
+        buf = jnp.zeros((n_experts * cap, d), xt.dtype)
+        for j in range(top_k):
+            buf = buf.at[slot[:, j]].add(xt, mode="drop")
+        buf = buf.reshape(n_experts, cap, d)
+
+        if ep:
+            midx = jax.lax.axis_index("model")
+            my = jax.lax.dynamic_slice_in_dim(buf, midx * e_loc, e_loc, 0)
+        else:
+            my = buf
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", my, gate)) * \
+            jnp.einsum("ecd,edf->ecf", my, up)
+        out = jnp.einsum("ecf,efd->ecd", h, down)
+
+        y = jnp.zeros((xt.shape[0], d), jnp.float32)
+        if ep:
+            flat = out.reshape(e_loc * cap, d)
+            for j in range(top_k):
+                e_l = sel[:, j] - midx * e_loc
+                owned = (e_l >= 0) & (e_l < e_loc) & keep[:, j]
+                idx = jnp.clip(e_l * cap + jnp.minimum(rank[:, j], cap - 1),
+                               0, e_loc * cap - 1)
+                g = jnp.take(flat, idx, axis=0).astype(jnp.float32)
+                y = y + jnp.where(owned[:, None], gates[:, j:j + 1] * g, 0.0)
+        else:
+            flat = out.reshape(n_experts * cap, d)
+            for j in range(top_k):
+                idx = jnp.minimum(slot[:, j], n_experts * cap - 1)
+                g = jnp.take(flat, idx, axis=0).astype(jnp.float32)
+                y = y + jnp.where(keep[:, j:j + 1], gates[:, j:j + 1] * g, 0.0)
+        if sg is not None:  # shared experts, TP over their d_ff
+            hs = jax.nn.silu(xt @ sg) * (xt @ su)
+            y = y + (hs @ sd).astype(jnp.float32)
+        y = jax.lax.psum(y, "model")
+        return y.astype(xt.dtype)
+
+    xt = x.reshape(t, d)
+    tok_spec = P(token_axes if len(token_axes) > 1 else
+                 (token_axes[0] if token_axes else None))
+    gate_spec = P("model", None, None) if ep else P(None, None, "model")
+    down_spec = P("model", None, None) if ep else P(None, "model", None)
+    has_shared = "shared" in p
+    if has_shared:
+        extra = (p["shared"]["gate"]["w"], p["shared"]["up"]["w"],
+                 p["shared"]["down"]["w"])
+        extra_specs = (P(None, "model"), P(None, "model"), P("model", None))
+    else:
+        dummy = jnp.zeros((1, 1), x.dtype)
+        extra = (dummy, dummy, dummy)
+        extra_specs = (P(), P(), P())
+
+        def body_noshared(xt, router, gate, up, down, _sg, _su, _sd):
+            return body(xt, router, gate, up, down, None, None, None)
+        body_fn = body_noshared
+    body_fn = body if has_shared else body_noshared
+    fn = jax.shard_map(
+        body_fn, mesh=mesh,
+        in_specs=(tok_spec, P(), gate_spec, gate_spec, down_spec) + extra_specs,
+        out_specs=tok_spec,
+        check_vma=False)
+    y = fn(xt, p["router"], p["gate"], p["up"], p["down"], *extra)
+    aux = {"router_probs_mean": jnp.zeros((n_experts,), jnp.float32),
+           "dropped_frac": jnp.zeros(()), "sel": None}
+    return y.reshape(b, s, d), aux
+
+
+def router_aux_losses(aux, n_experts: int):
+    """Load-balance loss (Switch-style) + router z-ish entropy penalty."""
+    pm = aux["router_probs_mean"]  # [E]
+    sel = aux["sel"]  # [T, k]
+    frac = jnp.bincount(sel.reshape(-1), length=n_experts).astype(jnp.float32)
+    frac = frac / jnp.maximum(frac.sum(), 1.0)
+    lb = n_experts * jnp.sum(frac * pm)
+    return {"load_balance": lb, "dropped_frac": aux["dropped_frac"]}

@@ -1,0 +1,112 @@
+"""ResNet with pre-activation blocks (He et al. 2016 [35]), the paper's large
+model (ResNet-34 on TinyImageNet).  NCHW / OIHW, lax.conv; BatchNorm replaced
+by GroupNorm(1) = LayerNorm-over-CHW for single-device training without
+cross-batch state (noted in DESIGN.md; the compression pipeline touches only
+conv kernels and is normalization-agnostic).
+
+``resnet34_config()`` is the paper model; ``resnet_small_config()`` is the
+reduced variant used by CPU tests/benches.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["ResNetConfig", "resnet34_config", "resnet_small_config", "init_resnet",
+           "resnet_forward", "resnet_loss", "conv_kernels"]
+
+
+@dataclass(frozen=True)
+class ResNetConfig:
+    stages: tuple[int, ...] = (3, 4, 6, 3)  # ResNet-34
+    widths: tuple[int, ...] = (64, 128, 256, 512)
+    classes: int = 200
+    in_ch: int = 3
+    stem_kernel: int = 3
+    dtype: str = "float32"
+
+
+def resnet34_config(classes: int = 200) -> ResNetConfig:
+    return ResNetConfig(classes=classes)
+
+
+def resnet_small_config(classes: int = 10) -> ResNetConfig:
+    return ResNetConfig(stages=(1, 1), widths=(16, 32), classes=classes)
+
+
+def _conv_init(key, n_out, n_in, k, dtype):
+    fan = n_in * k * k
+    return (jax.random.normal(key, (n_out, n_in, k, k)) * (2.0 / fan) ** 0.5).astype(dtype)
+
+
+def init_resnet(key, cfg: ResNetConfig):
+    dt = jnp.dtype(cfg.dtype)
+    keys = iter(jax.random.split(key, 256))
+    p = {"stem": _conv_init(next(keys), cfg.widths[0], cfg.in_ch, cfg.stem_kernel, dt),
+         "blocks": [], "head": {}}
+    c_in = cfg.widths[0]
+    for si, (n_blocks, w) in enumerate(zip(cfg.stages, cfg.widths)):
+        for bi in range(n_blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            blk = {
+                "gn1": jnp.ones((c_in,), dt),
+                "conv1": _conv_init(next(keys), w, c_in, 3, dt),
+                "gn2": jnp.ones((w,), dt),
+                "conv2": _conv_init(next(keys), w, w, 3, dt),
+            }
+            if stride != 1 or c_in != w:
+                blk["proj"] = _conv_init(next(keys), w, c_in, 1, dt)
+            p["blocks"].append(blk)
+            c_in = w
+    p["head"] = {"w": (jax.random.normal(next(keys), (cfg.classes, c_in)) * 0.01).astype(dt),
+                 "b": jnp.zeros((cfg.classes,), dt)}
+    return p
+
+
+def _gn(x, w):
+    """GroupNorm(1) over (C, H, W), scale per channel."""
+    mu = x.mean(axis=(1, 2, 3), keepdims=True)
+    var = x.var(axis=(1, 2, 3), keepdims=True)
+    return (x - mu) * lax.rsqrt(var + 1e-5) * w[None, :, None, None]
+
+
+def _conv(x, k, stride=1):
+    return lax.conv_general_dilated(x, k, (stride, stride), "SAME",
+                                    dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+def resnet_forward(params, x):
+    """x [B, C, H, W] -> logits."""
+    h = _conv(x, params["stem"])
+    for blk in params["blocks"]:
+        # stride-2 exactly at stage transitions (out channels != in channels);
+        # stride is derived, not stored, so the params stay a pure array pytree
+        stride = 2 if ("proj" in blk
+                       and blk["proj"].shape[0] != blk["proj"].shape[1]) else 1
+        y = jax.nn.relu(_gn(h, blk["gn1"]))
+        sc = _conv(y, blk["proj"], stride) if "proj" in blk else h
+        y = _conv(y, blk["conv1"], stride)
+        y = jax.nn.relu(_gn(y, blk["gn2"]))
+        y = _conv(y, blk["conv2"])
+        h = sc + y
+    h = jax.nn.relu(h).mean(axis=(2, 3))
+    return h @ params["head"]["w"].T + params["head"]["b"]
+
+
+def resnet_loss(params, x, y):
+    logits = resnet_forward(params, x)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return (lse - gold).mean()
+
+
+def conv_kernels(params) -> list[tuple[str, jnp.ndarray]]:
+    """All 3x3 conv kernels (the compression targets), name -> [N, K, O, O]."""
+    out = [("stem", params["stem"])]
+    for i, blk in enumerate(params["blocks"]):
+        out.append((f"block{i}.conv1", blk["conv1"]))
+        out.append((f"block{i}.conv2", blk["conv2"]))
+    return out

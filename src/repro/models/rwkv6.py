@@ -1,0 +1,190 @@
+"""RWKV-6 "Finch": time-mix with data-dependent per-channel decay + channel-mix.
+
+Recurrence (per head, state S in R^{K x V}, before-token convention):
+    y_t = r_t . (S_t + diag(u) k_t^T v_t)
+    S_{t+1} = diag(w_t) S_t + k_t^T v_t
+with w_t = exp(-exp(w0 + lora_w(x_t)))  (data-dependent decay, the Finch
+novelty) and token-shift ddlerp mixing on every projection input.
+
+Prefill uses a chunked formulation: within a chunk the pairwise term is a
+masked matmul on decay-normalized keys/queries; across chunks the [H, K, V]
+state is carried (scan, or static loop when ``unroll_chunks``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_shard import constrain
+
+from .layers import dense_init, linear
+
+__all__ = ["init_rwkv6", "rwkv6_timemix_prefill", "rwkv6_timemix_decode",
+           "init_rwkv6_channelmix", "rwkv6_channelmix", "RWKV6State"]
+
+_MIX = ("r", "k", "v", "w", "g")
+
+
+class RWKV6State(NamedTuple):
+    wkv: jnp.ndarray  # [B, H, K, V]
+    x_prev: jnp.ndarray  # [B, d_model]  (time-mix token shift)
+
+
+def init_rwkv6(key, d_model: int, *, head_dim: int, lora_w: int = 64,
+               lora_mix: int = 32, dtype=jnp.bfloat16):
+    h = d_model // head_dim
+    ks = jax.random.split(key, 12)
+    p = {
+        "mix_mu": jnp.full((len(_MIX), d_model), 0.5, jnp.float32),
+        "mix_A": (jax.random.normal(ks[0], (d_model, lora_mix * len(_MIX))) * 0.01).astype(dtype),
+        "mix_B": (jax.random.normal(ks[1], (len(_MIX), lora_mix, d_model)) * 0.01).astype(dtype),
+        "r": dense_init(ks[2], d_model, d_model, dtype),
+        "k": dense_init(ks[3], d_model, d_model, dtype),
+        "v": dense_init(ks[4], d_model, d_model, dtype),
+        "g": dense_init(ks[5], d_model, d_model, dtype),
+        "o": dense_init(ks[6], d_model, d_model, dtype),
+        "w0": jnp.full((d_model,), -5.0, jnp.float32),
+        "wA": (jax.random.normal(ks[7], (d_model, lora_w)) * 0.01).astype(dtype),
+        "wB": (jax.random.normal(ks[8], (lora_w, d_model)) * 0.01).astype(dtype),
+        "u": (jax.random.normal(ks[9], (h, head_dim)) * 0.1).astype(jnp.float32),
+        "ln_w": jnp.ones((d_model,), jnp.float32),  # per-head group norm scale
+    }
+    return p
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token-shift: one mixed input per projection (r,k,v,w,g)."""
+    delta = x_prev - x
+    lora = jnp.tanh(x @ p["mix_A"])  # [B,S,5*lm]
+    lora = lora.reshape(*x.shape[:-1], len(_MIX), -1)
+    dd = jnp.einsum("bsmi,mid->bsmd", lora, p["mix_B"].astype(x.dtype))
+    mu = p["mix_mu"].astype(x.dtype)  # [5, d]
+    mixed = x[..., None, :] + delta[..., None, :] * (mu + dd)
+    return tuple(mixed[..., i, :] for i in range(len(_MIX)))
+
+
+def _group_norm_heads(x, w, h, eps=64e-5):
+    """Per-head LayerNorm of the wkv output (RWKV's ln_x)."""
+    b, s, d = x.shape
+    xh = x.reshape(b, s, h, d // h).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(b, s, d) * w).astype(x.dtype)
+
+
+def rwkv6_timemix_prefill(p, x, *, head_dim: int, chunk: int = 256,
+                          unroll_chunks: bool = False,
+                          state: RWKV6State | None = None):
+    """x [B, S, d] -> (y [B, S, d], final RWKV6State)."""
+    b, s, d = x.shape
+    h = d // head_dim
+    x_prev_tok = jnp.concatenate(
+        [state.x_prev[:, None] if state is not None else jnp.zeros((b, 1, d), x.dtype),
+         x[:, :-1]], axis=1)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev_tok)
+
+    r = constrain(linear(p["r"], xr).reshape(b, s, h, head_dim),
+                  "batch", None, "model", None).astype(jnp.float32)
+    k = constrain(linear(p["k"], xk).reshape(b, s, h, head_dim),
+                  "batch", None, "model", None).astype(jnp.float32)
+    v = constrain(linear(p["v"], xv).reshape(b, s, h, head_dim),
+                  "batch", None, "model", None).astype(jnp.float32)
+    g = jax.nn.silu(linear(p["g"], xg))
+    logw = -jnp.exp(p["w0"] + (jnp.tanh(xw @ p["wA"]) @ p["wB"]).astype(jnp.float32))
+    logw = logw.reshape(b, s, h, head_dim)  # log decay, < 0
+
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+    r, k, v, logw = (t.reshape(b, nc, q, h, head_dim) for t in (r, k, v, logw))
+    lcum = jnp.cumsum(logw, axis=2)  # [B,nc,q,H,K]
+
+    mask = jnp.tril(jnp.ones((q, q), bool), -1)  # strictly lower: s < t
+    u = p["u"]  # [H, K]
+
+    def chunk_math(rc, kc, vc, lc, lw, st):
+        # rq_t = r_t * exp(l_{t-1});  ks_s = k_s * exp(-l_s)
+        lprev = lc - lw  # l_{t-1} = cumsum up to t-1
+        rq = rc * jnp.exp(lprev)
+        ks = kc * jnp.exp(-lc)
+        score = jnp.einsum("bthk,bshk->bhts", rq, ks)
+        score = jnp.where(mask[None, None], score, 0.0)
+        y = jnp.einsum("bhts,bshv->bthv", score, vc)
+        # bonus diagonal term: y_t += (r_t . (u * k_t)) v_t
+        y = y + jnp.einsum("bthk,hk->bth", rc * kc, u)[..., None] * vc
+        # inter-chunk: y_t += (r_t * exp(l_{t-1})) . state
+        y = y + jnp.einsum("bthk,bhkv->bthv", rq, st)
+        # state' = diag(exp(l_Q)) state + sum_s exp(l_Q - l_s) k_s v_s
+        lq = lc[:, -1]  # [B,H,K]
+        kdec = kc * jnp.exp(lq[:, None] - lc)
+        st = st * jnp.exp(lq)[..., None] + jnp.einsum("bshk,bshv->bhkv", kdec, vc)
+        return y, st
+
+    st0 = state.wkv.astype(jnp.float32) if state is not None else \
+        jnp.zeros((b, h, head_dim, head_dim), jnp.float32)
+    if unroll_chunks:
+        st = st0
+        ys = []
+        for i in range(nc):
+            y, st = chunk_math(r[:, i], k[:, i], v[:, i], lcum[:, i], logw[:, i], st)
+            ys.append(y)
+        y = jnp.stack(ys, 1)
+    else:
+        def body(st, args):
+            y, st = chunk_math(*args, st)
+            return st, y
+
+        st, y = jax.lax.scan(body, st0, tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, lcum, logw)))
+        y = jnp.moveaxis(y, 0, 1)
+
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = _group_norm_heads(y, p["ln_w"], h) * g
+    return linear(p["o"], y), RWKV6State(wkv=st, x_prev=x[:, -1])
+
+
+def rwkv6_timemix_decode(p, x, state: RWKV6State, *, head_dim: int):
+    """One-token step. x [B, 1, d]."""
+    b, _, d = x.shape
+    h = d // head_dim
+    x_prev_tok = state.x_prev[:, None]
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev_tok)
+    r = linear(p["r"], xr).reshape(b, h, head_dim).astype(jnp.float32)
+    k = linear(p["k"], xk).reshape(b, h, head_dim).astype(jnp.float32)
+    v = linear(p["v"], xv).reshape(b, h, head_dim).astype(jnp.float32)
+    g = jax.nn.silu(linear(p["g"], xg))
+    w = jnp.exp(-jnp.exp(p["w0"] + (jnp.tanh(xw @ p["wA"]) @ p["wB"]).astype(jnp.float32)))
+    w = w.reshape(b, 1, h, head_dim)[:, 0]
+
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    y = jnp.einsum("bhk,bhkv->bhv", r, state.wkv.astype(jnp.float32) + p["u"][..., None] * kv)
+    wkv = state.wkv.astype(jnp.float32) * w[..., None] + kv
+    y = y.reshape(b, 1, d).astype(x.dtype)
+    y = _group_norm_heads(y, p["ln_w"], h) * g
+    return linear(p["o"], y), RWKV6State(wkv=wkv, x_prev=x[:, 0])
+
+
+def init_rwkv6_channelmix(key, d_model: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "mix_mu_k": jnp.full((d_model,), 0.5, jnp.float32),
+        "k": dense_init(ks[0], d_model, d_ff, dtype),
+        "v": dense_init(ks[1], d_ff, d_model, dtype),
+        "r": dense_init(ks[2], d_model, d_model, dtype),
+    }
+
+
+def rwkv6_channelmix(p, x, x_prev_last=None):
+    """Squared-ReLU channel mix with token shift. Returns (y, last token x)."""
+    b, s, d = x.shape
+    xp = jnp.concatenate(
+        [x_prev_last[:, None] if x_prev_last is not None else jnp.zeros((b, 1, d), x.dtype),
+         x[:, :-1]], axis=1)
+    mu = p["mix_mu_k"].astype(x.dtype)
+    xk = x + (xp - x) * mu
+    kk = constrain(jnp.square(jax.nn.relu(linear(p["k"], xk))), "batch", None, "model")
+    rr = jax.nn.sigmoid(linear(p["r"], xk))
+    return constrain(rr * linear(p["v"], kk), "batch", None, None), x[:, -1]

@@ -1,0 +1,512 @@
+"""Unified decoder backbone covering all assigned LM families.
+
+Block layout per family:
+  dense / vlm:   x += attn(norm(x));   x += swiglu(norm(x))
+  moe:           x += attn|mla(norm(x)); x += moe(norm(x)) [+ shared experts]
+  ssm (rwkv6):   x += timemix(norm(x)); x += channelmix(norm(x))
+  hybrid(zamba): groups of ``hybrid_period`` mamba2 blocks, one *weight-shared*
+                 attention+MLP block between groups (the zamba2 trick: depth
+                 reuses one attention block's parameters).
+
+Layers are scanned (stacked [L, ...] params) for compact HLO and FSDP-friendly
+per-layer weight gathering; ``unroll`` switches to a static python loop for
+the roofline cost pass.  Loss is sequence-chunked so [B, S, V] logits are never
+materialized.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.act_shard import constrain
+
+from .attention import (
+    KVCache,
+    MLACache,
+    attention_decode,
+    attention_prefill,
+    init_attention,
+    init_kv_cache,
+    init_mla,
+    mla_decode,
+    mla_prefill,
+)
+from .layers import dense_init, linear, non_parametric_ln, rms_norm, swiglu
+from .mamba2 import Mamba2State, init_mamba2, mamba2_decode, mamba2_prefill
+from .moe import init_moe, moe_ffn, moe_ffn_manual
+from .rwkv6 import (
+    RWKV6State,
+    init_rwkv6,
+    init_rwkv6_channelmix,
+    rwkv6_channelmix,
+    rwkv6_timemix_decode,
+    rwkv6_timemix_prefill,
+)
+
+__all__ = ["init_params", "forward", "decode_step", "init_decode_state", "loss_fn"]
+
+
+def _scan(body, init, xs, unroll: bool):
+    """lax.scan or a static python loop (roofline cost pass — while bodies are
+    undercounted by HLO cost analysis, DESIGN.md Sec. 6)."""
+    if not unroll:
+        return jax.lax.scan(body, init, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+def _norm(cfg: ArchConfig, p, x):
+    if cfg.norm == "nonparam":
+        return non_parametric_ln(x)
+    return rms_norm(x, p)
+
+
+def _norm_param(cfg: ArchConfig, d):
+    # non-parametric LN keeps a (frozen, unused) scale so pytree structure is uniform
+    return jnp.ones((d,), cfg.pdtype)
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"ln1": _norm_param(cfg, cfg.d_model),
+                         "ln2": _norm_param(cfg, cfg.d_model)}
+    if cfg.family == "ssm":  # rwkv6
+        p["tm"] = init_rwkv6(ks[0], cfg.d_model, head_dim=cfg.hd, dtype=cfg.pdtype)
+        p["cm"] = init_rwkv6_channelmix(ks[1], cfg.d_model, cfg.d_ff, cfg.pdtype)
+        return p
+    if cfg.family == "hybrid":  # zamba2 mamba block (attention is shared, separate)
+        p.pop("ln2")
+        p["mamba"] = init_mamba2(ks[0], cfg.d_model, d_inner=cfg.ssm.d_inner,
+                                 d_state=cfg.ssm.d_state, head_dim=cfg.ssm.head_dim,
+                                 d_conv=cfg.ssm.d_conv, dtype=cfg.pdtype)
+        return p
+    if cfg.mla is not None:
+        p["attn"] = init_mla(ks[0], cfg.d_model, cfg.n_heads, kv_lora=cfg.mla.kv_lora,
+                             qk_nope=cfg.mla.qk_nope, qk_rope=cfg.mla.qk_rope,
+                             v_dim=cfg.mla.v_dim, dtype=cfg.pdtype)
+    else:
+        p["attn"] = init_attention(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.hd, cfg.pdtype, qkv_bias=cfg.qkv_bias)
+    if cfg.moe is not None:
+        p["ffn"] = init_moe(ks[1], cfg.d_model, cfg.moe.d_ff_expert, cfg.moe.n_experts,
+                            cfg.moe.n_shared, cfg.pdtype)
+    else:
+        p["ffn"] = {
+            "gate": dense_init(ks[1], cfg.d_model, cfg.d_ff, cfg.pdtype),
+            "up": dense_init(ks[2], cfg.d_model, cfg.d_ff, cfg.pdtype),
+            "down": dense_init(ks[3], cfg.d_ff, cfg.d_model, cfg.pdtype),
+        }
+    return p
+
+
+def _init_shared_attn(key, cfg: ArchConfig):
+    """Zamba2's weight-shared attention + MLP block."""
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": _norm_param(cfg, cfg.d_model),
+        "ln2": _norm_param(cfg, cfg.d_model),
+        "attn": init_attention(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.hd, cfg.pdtype),
+        "ffn": {
+            "gate": dense_init(ks[1], cfg.d_model, cfg.d_ff, cfg.pdtype),
+            "up": dense_init(ks[2], cfg.d_model, cfg.d_ff, cfg.pdtype),
+            "down": dense_init(ks[3], cfg.d_ff, cfg.d_model, cfg.pdtype),
+        },
+    }
+
+
+def init_params(key, cfg: ArchConfig):
+    k_emb, k_blocks, k_head, k_shared = jax.random.split(key, 4)
+    scale = cfg.d_model**-0.5
+    params: dict[str, Any] = {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab, cfg.d_model)) * scale).astype(cfg.pdtype),
+        "final_ln": _norm_param(cfg, cfg.d_model),
+    }
+    block_keys = jax.random.split(k_blocks, cfg.n_layers)
+    params["blocks"] = jax.vmap(lambda k: _init_block(k, cfg))(block_keys)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, cfg.d_model, cfg.vocab, cfg.pdtype)
+    if cfg.family == "hybrid":
+        params["shared_attn"] = _init_shared_attn(k_shared, cfg)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _block_fwd(cfg: ArchConfig, p, x, positions, *, unroll: bool, state=None,
+               mrope_positions=None):
+    """One block forward. Returns (x, per-layer state-out or aux)."""
+    if cfg.family == "ssm":
+        tm_in = _norm(cfg, p["ln1"], x)
+        y, st = rwkv6_timemix_prefill(p["tm"], tm_in, head_dim=cfg.hd,
+                                      chunk=cfg.ssm_chunk, unroll_chunks=unroll,
+                                      state=None)
+        x = x + y
+        cm_in = _norm(cfg, p["ln2"], x)
+        y, cm_last = rwkv6_channelmix(p["cm"], cm_in)
+        x = x + y
+        return x, RWKV6State(wkv=st.wkv, x_prev=st.x_prev), cm_last
+    if cfg.family == "hybrid":
+        y, st = mamba2_prefill(p["mamba"], _norm(cfg, p["ln1"], x),
+                               d_inner=cfg.ssm.d_inner, d_state=cfg.ssm.d_state,
+                               head_dim=cfg.ssm.head_dim, d_conv=cfg.ssm.d_conv,
+                               chunk=cfg.ssm_chunk, unroll_chunks=unroll)
+        return x + y, st, None
+    # attention family
+    attn_in = _norm(cfg, p["ln1"], x)
+    if cfg.mla is not None:
+        y, c_kv, k_rope = mla_prefill(p["attn"], attn_in, positions, n_heads=cfg.n_heads,
+                                      kv_lora=cfg.mla.kv_lora, qk_nope=cfg.mla.qk_nope,
+                                      qk_rope=cfg.mla.qk_rope, v_dim=cfg.mla.v_dim,
+                                      rope_theta=cfg.rope_theta, q_chunk=cfg.q_chunk,
+                                      unroll_chunks=unroll,
+                                      causal_skip=cfg.causal_chunk_skip)
+        kv = (c_kv, k_rope)
+    else:
+        y, k, v = attention_prefill(
+            p["attn"], attn_in, positions, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.hd, causal=True, window=cfg.attn_window,
+            rope_theta=None if cfg.pos in ("none", "mrope") else cfg.rope_theta,
+            mrope_sections=cfg.mrope_sections if cfg.pos == "mrope" else None,
+            mrope_positions=mrope_positions, q_chunk=cfg.q_chunk, unroll_chunks=unroll,
+            causal_skip=cfg.causal_chunk_skip)
+        kv = (k, v)
+    x = x + y
+    ffn_in = _norm(cfg, p["ln2"], x)
+    if cfg.moe is not None:
+        moe_fn = moe_ffn_manual if cfg.moe_manual else moe_ffn
+        y, _aux = moe_fn(p["ffn"], ffn_in, n_experts=cfg.moe.n_experts,
+                         top_k=cfg.moe.top_k, capacity_factor=cfg.moe.capacity_factor,
+                         norm_topk=cfg.moe.norm_topk)
+    else:
+        y = swiglu(p["ffn"], ffn_in)
+    return x + y, kv, None
+
+
+def _shared_attn_fwd(cfg: ArchConfig, p, x, positions, *, unroll: bool):
+    y, k, v = attention_prefill(p["attn"], _norm(cfg, p["ln1"], x), positions,
+                                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                                causal=True, window=cfg.attn_window,
+                                rope_theta=cfg.rope_theta, q_chunk=cfg.q_chunk,
+                                unroll_chunks=unroll, causal_skip=cfg.causal_chunk_skip)
+    x = x + y
+    x = x + swiglu(p["ffn"], _norm(cfg, p["ln2"], x))
+    return x, (k, v)
+
+
+def forward(params, cfg: ArchConfig, *, tokens=None, embeds=None, positions=None,
+            positions3=None, unroll: bool = False, collect_cache: bool = False):
+    """Train/prefill forward -> (hidden [B,S,d], caches or None)."""
+    if embeds is not None:
+        x = embeds.astype(cfg.cdtype)
+        b, s = x.shape[:2]
+    else:
+        b, s = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype)
+    x = constrain(x, "batch", None, None)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    if cfg.pos == "mrope" and positions3 is None:
+        positions3 = jnp.broadcast_to(jnp.arange(s)[None, None], (3, b, s))
+
+    blocks = params["blocks"]
+
+    def one(x, bp):
+        return _block_fwd(cfg, bp, x, positions, unroll=unroll,
+                          mrope_positions=positions3)
+
+    if cfg.family == "hybrid":
+        period = cfg.hybrid_period
+        n_groups = cfg.n_layers // period
+        tail = cfg.n_layers - n_groups * period
+        if unroll or collect_cache:  # python loop: roofline pass / serving prefill
+            caches = {"mamba": [], "attn": []}
+            li = 0
+            for g in range(n_groups):
+                for _ in range(period):
+                    bp = jax.tree.map(lambda a: a[li], blocks)
+                    x, st, _ = one(x, bp)
+                    caches["mamba"].append(st)
+                    li += 1
+                x, kv = _shared_attn_fwd(cfg, params["shared_attn"], x, positions,
+                                         unroll=unroll)
+                caches["attn"].append(kv)
+            for _ in range(tail):
+                bp = jax.tree.map(lambda a: a[li], blocks)
+                x, st, _ = one(x, bp)
+                caches["mamba"].append(st)
+                li += 1
+            cache_out = caches if collect_cache else None
+        else:  # production path: scan over groups, inner scan over mamba layers
+            main = jax.tree.map(
+                lambda a: a[: n_groups * period].reshape(n_groups, period, *a.shape[1:]),
+                blocks)
+
+            def layer_body(x, bp):
+                x, _st, _ = one(x, bp)
+                return x, None
+
+            def group_body(x, gp):
+                x, _ = jax.lax.scan(layer_body, x, gp)
+                x, _kv = _shared_attn_fwd(cfg, params["shared_attn"], x, positions,
+                                          unroll=False)
+                return x, None
+
+            if cfg.remat:
+                group_body = jax.checkpoint(group_body)
+            x, _ = jax.lax.scan(group_body, x, main)
+            if tail:
+                tailb = jax.tree.map(lambda a: a[n_groups * period:], blocks)
+                body = jax.checkpoint(layer_body) if cfg.remat else layer_body
+                x, _ = jax.lax.scan(body, x, tailb)
+            cache_out = None
+    elif unroll:
+        cache_list = []
+        if collect_cache:
+            for li in range(cfg.n_layers):
+                bp = jax.tree.map(lambda a: a[li], blocks)
+                x, c, _extra = one(x, bp)
+                cache_list.append(c)
+        else:
+            xonly = lambda x, bp: one(x, bp)[0]  # noqa: E731
+            fn = jax.checkpoint(xonly) if cfg.remat else xonly
+            for li in range(cfg.n_layers):
+                bp = jax.tree.map(lambda a: a[li], blocks)
+                x = fn(x, bp)
+        cache_out = cache_list if collect_cache else None
+    else:
+        def body(x, bp):
+            x, c, _extra = one(x, bp)
+            return x, c if collect_cache else None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, stacked = jax.lax.scan(body, x, blocks)
+        cache_out = stacked if collect_cache else None
+
+    x = _norm(cfg, params["final_ln"], x)
+    return x, cache_out
+
+
+def logits_from_hidden(params, cfg: ArchConfig, h):
+    if cfg.tie_embeddings:
+        return h @ params["embed"].T.astype(h.dtype)
+    return linear(params["lm_head"], h)
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, unroll: bool = False,
+            seq_chunk: int = 512):
+    """Sequence-chunked cross-entropy; logits [B,S,V] never materialized."""
+    h, _ = forward(params, cfg,
+                   tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+                   positions3=batch.get("positions3"), unroll=unroll)
+    labels = batch["labels"]
+    b, s = labels.shape
+    c = min(seq_chunk, s)
+    while s % c:
+        c //= 2
+    nc = s // c
+    hch = h.reshape(b, nc, c, cfg.d_model)
+    lch = labels.reshape(b, nc, c)
+
+    def chunk_loss(hc, lc):
+        logits = logits_from_hidden(params, cfg, hc).astype(jnp.float32)  # [B,c,V]
+        logits = constrain(logits, "batch", None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return (lse - gold).sum()
+
+    if unroll or nc == 1:
+        tot = 0.0
+        for i in range(nc):
+            tot += chunk_loss(hch[:, i], lch[:, i])
+    else:
+        def body(acc, xs):
+            hc, lc = xs
+            return acc + chunk_loss(hc, lc), None
+
+        tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                              (jnp.moveaxis(hch, 1, 0), jnp.moveaxis(lch, 1, 0)))
+    return tot / (b * s)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, smax: int):
+    """Abstract-init-friendly per-layer decode caches (call under eval_shape too)."""
+    L = cfg.n_layers
+    cd = cfg.cdtype
+    if cfg.family == "ssm":
+        h = cfg.d_model // cfg.hd
+        return {
+            "wkv": jnp.zeros((L, batch, h, cfg.hd, cfg.hd), jnp.float32),
+            "x_prev_tm": jnp.zeros((L, batch, cfg.d_model), cd),
+            "x_prev_cm": jnp.zeros((L, batch, cfg.d_model), cd),
+        }
+    if cfg.family == "hybrid":
+        hh = cfg.ssm.d_inner // cfg.ssm.head_dim
+        n_attn = cfg.n_layers // cfg.hybrid_period
+        conv_dim = cfg.ssm.d_inner + 2 * cfg.ssm.d_state
+        return {
+            "ssm": jnp.zeros((L, batch, hh, cfg.ssm.d_state, cfg.ssm.head_dim), jnp.float32),
+            "conv": jnp.zeros((L, batch, conv_dim, cfg.ssm.d_conv - 1), cd),
+            "attn_k": jnp.zeros((n_attn, batch, smax, cfg.n_kv_heads, cfg.hd), cd),
+            "attn_v": jnp.zeros((n_attn, batch, smax, cfg.n_kv_heads, cfg.hd), cd),
+            "attn_kpos": jnp.full((n_attn, batch, smax), -1, jnp.int32),
+        }
+    if cfg.mla is not None:
+        return {
+            "c_kv": jnp.zeros((L, batch, smax, cfg.mla.kv_lora), cd),
+            "k_rope": jnp.zeros((L, batch, smax, cfg.mla.qk_rope), cd),
+            "kpos": jnp.full((L, batch, smax), -1, jnp.int32),
+        }
+    w = cfg.attn_window
+    eff = min(smax, w) if w is not None else smax
+    return {
+        "k": jnp.zeros((L, batch, eff, cfg.n_kv_heads, cfg.hd), cd),
+        "v": jnp.zeros((L, batch, eff, cfg.n_kv_heads, cfg.hd), cd),
+        "kpos": jnp.full((L, batch, eff), -1, jnp.int32),
+    }
+
+
+def decode_step(params, cfg: ArchConfig, state, token, pos, *, unroll: bool = False):
+    """One decode step: (logits [B, V], new state). token [B,1], pos [B]."""
+    x = jnp.take(params["embed"], token, axis=0).astype(cfg.cdtype)
+    blocks = params["blocks"]
+
+    if cfg.family == "ssm":
+        def body(x, xs):
+            bp, wkv, xp_tm, xp_cm = xs
+            tm_in = _norm(cfg, bp["ln1"], x)
+            y, st = rwkv6_timemix_decode(bp["tm"], tm_in,
+                                         RWKV6State(wkv=wkv, x_prev=xp_tm),
+                                         head_dim=cfg.hd)
+            x = x + y
+            cm_in = _norm(cfg, bp["ln2"], x)
+            y, _cm_last = rwkv6_channelmix(bp["cm"], cm_in, x_prev_last=xp_cm)
+            x = x + y
+            return x, (st.wkv, st.x_prev, cm_in[:, 0])
+
+        x, outs = _scan(body, x, (blocks, state["wkv"], state["x_prev_tm"],
+                              state["x_prev_cm"]), unroll)
+        new = {"wkv": outs[0], "x_prev_tm": outs[1], "x_prev_cm": outs[2]}
+    elif cfg.family == "hybrid":
+        period = cfg.hybrid_period
+        n_groups = cfg.n_layers // period
+        tail = cfg.n_layers - n_groups * period
+        nmain = n_groups * period
+        sp = params["shared_attn"]
+
+        def mamba_body(x, xs):
+            bp, ssm, conv = xs
+            st = Mamba2State(ssm=ssm, conv=conv)
+            y, st2 = mamba2_decode(bp["mamba"], _norm(cfg, bp["ln1"], x), st,
+                                   d_inner=cfg.ssm.d_inner, d_state=cfg.ssm.d_state,
+                                   head_dim=cfg.ssm.head_dim, d_conv=cfg.ssm.d_conv)
+            return x + y, (st2.ssm, st2.conv)
+
+        def group_body(x, xs):
+            gb, gssm, gconv, ak, av, akp = xs
+            x, (ssm2, conv2) = _scan(mamba_body, x, (gb, gssm, gconv), unroll)
+            cache = KVCache(k=ak, v=av, kpos=akp)
+            y, c2 = attention_decode(sp["attn"], _norm(cfg, sp["ln1"], x), cache, pos,
+                                     n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                                     head_dim=cfg.hd, window=cfg.attn_window,
+                                     rope_theta=cfg.rope_theta)
+            x = x + y
+            x = x + swiglu(sp["ffn"], _norm(cfg, sp["ln2"], x))
+            return x, (ssm2, conv2, c2.k, c2.v, c2.kpos)
+
+        regroup = lambda a: a[:nmain].reshape(n_groups, period, *a.shape[1:])  # noqa: E731
+        main_b = jax.tree.map(regroup, blocks)
+        x, outs = _scan(group_body, x,
+                        (main_b, regroup(state["ssm"]), regroup(state["conv"]),
+                         state["attn_k"], state["attn_v"], state["attn_kpos"]),
+                        unroll)
+        ssm2 = outs[0].reshape(nmain, *state["ssm"].shape[1:])
+        conv2 = outs[1].reshape(nmain, *state["conv"].shape[1:])
+        if tail:
+            tail_b = jax.tree.map(lambda a: a[nmain:], blocks)
+            x, touts = _scan(mamba_body, x,
+                             (tail_b, state["ssm"][nmain:], state["conv"][nmain:]),
+                             unroll)
+            ssm2 = jnp.concatenate([ssm2, touts[0]])
+            conv2 = jnp.concatenate([conv2, touts[1]])
+        new = {"ssm": ssm2, "conv": conv2, "attn_k": outs[2], "attn_v": outs[3],
+               "attn_kpos": outs[4]}
+    elif cfg.mla is not None:
+        def body(x, xs):
+            bp, ck, kr, kp = xs
+            cache = MLACache(c_kv=ck, k_rope=kr, kpos=kp)
+            y, c2 = mla_decode(bp["attn"], _norm(cfg, bp["ln1"], x), cache, pos,
+                               n_heads=cfg.n_heads, kv_lora=cfg.mla.kv_lora,
+                               qk_nope=cfg.mla.qk_nope, qk_rope=cfg.mla.qk_rope,
+                               v_dim=cfg.mla.v_dim, rope_theta=cfg.rope_theta)
+            x = x + y
+            ffn_in = _norm(cfg, bp["ln2"], x)
+            if cfg.moe is not None:
+                moe_fn = moe_ffn_manual if cfg.moe_manual else moe_ffn
+                y, _ = moe_fn(bp["ffn"], ffn_in, n_experts=cfg.moe.n_experts,
+                              top_k=cfg.moe.top_k,
+                              capacity_factor=cfg.moe.capacity_factor,
+                              norm_topk=cfg.moe.norm_topk)
+            else:
+                y = swiglu(bp["ffn"], ffn_in)
+            return x + y, (c2.c_kv, c2.k_rope, c2.kpos)
+
+        x, outs = _scan(body, x, (blocks, state["c_kv"], state["k_rope"],
+                              state["kpos"]), unroll)
+        new = {"c_kv": outs[0], "k_rope": outs[1], "kpos": outs[2]}
+    else:
+        def body(x, xs):
+            bp, k, v, kp = xs
+            cache = KVCache(k=k, v=v, kpos=kp)
+            y, c2 = attention_decode(
+                bp["attn"], _norm(cfg, bp["ln1"], x), cache, pos,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                window=cfg.attn_window,
+                rope_theta=None if cfg.pos in ("none", "mrope") else cfg.rope_theta,
+                mrope_sections=cfg.mrope_sections if cfg.pos == "mrope" else None,
+                mrope_positions=jnp.broadcast_to(pos[None, :, None], (3, pos.shape[0], 1))
+                if cfg.pos == "mrope" else None)
+            x = x + y
+            ffn_in = _norm(cfg, bp["ln2"], x)
+            if cfg.moe is not None:
+                moe_fn = moe_ffn_manual if cfg.moe_manual else moe_ffn
+                y, _ = moe_fn(bp["ffn"], ffn_in, n_experts=cfg.moe.n_experts,
+                              top_k=cfg.moe.top_k,
+                              capacity_factor=cfg.moe.capacity_factor,
+                              norm_topk=cfg.moe.norm_topk)
+            else:
+                y = swiglu(bp["ffn"], ffn_in)
+            return x + y, (c2.k, c2.v, c2.kpos)
+
+        x, outs = _scan(body, x, (blocks, state["k"], state["v"], state["kpos"]), unroll)
+        new = {"k": outs[0], "v": outs[1], "kpos": outs[2]}
+
+    h = _norm(cfg, params["final_ln"], x)
+    logits = logits_from_hidden(params, cfg, h)[:, 0]
+    return logits, new

@@ -1,0 +1,186 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed per spec).
+
+``frames`` are precomputed frame embeddings [B, S, d] (the conv frontend stub);
+the encoder is bidirectional, the decoder causal with cross-attention.
+Sinusoidal encoder positions, learned decoder positions, pre-LN layout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+from .attention import KVCache, attention_decode, attention_prefill, init_attention
+from .layers import dense_init, gelu_mlp, layer_norm, linear
+
+__all__ = ["init_params", "encode", "decoder_forward", "loss_fn", "decode_step",
+           "init_decode_state"]
+
+
+def _ln_p(d, dtype):
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def _init_layer(key, cfg: ArchConfig, cross: bool):
+    ks = jax.random.split(key, 5)
+    p = {
+        "ln1": _ln_p(cfg.d_model, cfg.pdtype),
+        "attn": init_attention(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.hd, cfg.pdtype, qkv_bias=True),
+        "ln2": _ln_p(cfg.d_model, cfg.pdtype),
+        "mlp": {"fc1": dense_init(ks[1], cfg.d_model, cfg.d_ff, cfg.pdtype, bias=True),
+                "fc2": dense_init(ks[2], cfg.d_ff, cfg.d_model, cfg.pdtype, bias=True)},
+    }
+    if cross:
+        p["ln_x"] = _ln_p(cfg.d_model, cfg.pdtype)
+        p["xattn"] = init_attention(ks[3], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                    cfg.hd, cfg.pdtype, qkv_bias=True)
+    return p
+
+
+def init_params(key, cfg: ArchConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    enc_keys = jax.random.split(k1, cfg.enc_layers)
+    dec_keys = jax.random.split(k2, cfg.n_layers)
+    return {
+        "enc_blocks": jax.vmap(lambda k: _init_layer(k, cfg, cross=False))(enc_keys),
+        "enc_ln": _ln_p(cfg.d_model, cfg.pdtype),
+        "dec_blocks": jax.vmap(lambda k: _init_layer(k, cfg, cross=True))(dec_keys),
+        "dec_ln": _ln_p(cfg.d_model, cfg.pdtype),
+        "embed": (jax.random.normal(k3, (cfg.vocab, cfg.d_model)) * cfg.d_model**-0.5
+                  ).astype(cfg.pdtype),
+        "dec_pos": (jax.random.normal(k4, (cfg.max_decoder_len, cfg.d_model)) * 0.01
+                    ).astype(cfg.pdtype),
+    }
+
+
+def _sinusoid(s, d):
+    pos = np.arange(s)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    return jnp.asarray(np.concatenate([np.sin(ang), np.cos(ang)], axis=1), jnp.float32)
+
+
+def encode(params, cfg: ArchConfig, frames, *, unroll: bool = False):
+    """frames [B, S, d] -> encoder states [B, S, d]."""
+    b, s, _ = frames.shape
+    x = frames.astype(cfg.cdtype) + _sinusoid(s, cfg.d_model).astype(cfg.cdtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def one(x, bp):
+        a_in = layer_norm(x, bp["ln1"]["w"], bp["ln1"]["b"])
+        y, _, _ = attention_prefill(bp["attn"], a_in, positions, n_heads=cfg.n_heads,
+                                    n_kv=cfg.n_kv_heads, head_dim=cfg.hd, causal=False,
+                                    rope_theta=None, q_chunk=cfg.q_chunk,
+                                    unroll_chunks=unroll)
+        x = x + y
+        m_in = layer_norm(x, bp["ln2"]["w"], bp["ln2"]["b"])
+        return x + gelu_mlp(bp["mlp"], m_in)
+
+    if unroll:
+        for li in range(cfg.enc_layers):
+            bp = jax.tree.map(lambda a: a[li], params["enc_blocks"])
+            x = one(x, bp)
+    else:
+        def body(x, bp):
+            return one(x, bp), None
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return layer_norm(x, params["enc_ln"]["w"], params["enc_ln"]["b"])
+
+
+def decoder_forward(params, cfg: ArchConfig, tokens, enc_out, *, unroll: bool = False):
+    """Teacher-forced decoder -> hidden [B, T, d]."""
+    b, t = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype)
+    x = x + params["dec_pos"][:t][None].astype(cfg.cdtype)
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+
+    def one(x, bp):
+        a_in = layer_norm(x, bp["ln1"]["w"], bp["ln1"]["b"])
+        y, _, _ = attention_prefill(bp["attn"], a_in, positions, n_heads=cfg.n_heads,
+                                    n_kv=cfg.n_kv_heads, head_dim=cfg.hd, causal=True,
+                                    rope_theta=None, q_chunk=cfg.q_chunk,
+                                    unroll_chunks=unroll)
+        x = x + y
+        x_in = layer_norm(x, bp["ln_x"]["w"], bp["ln_x"]["b"])
+        y, _, _ = attention_prefill(bp["xattn"], x_in, positions, n_heads=cfg.n_heads,
+                                    n_kv=cfg.n_kv_heads, head_dim=cfg.hd, causal=False,
+                                    rope_theta=None, q_chunk=cfg.q_chunk,
+                                    unroll_chunks=unroll, kv_x=enc_out)
+        x = x + y
+        m_in = layer_norm(x, bp["ln2"]["w"], bp["ln2"]["b"])
+        return x + gelu_mlp(bp["mlp"], m_in)
+
+    if unroll:
+        for li in range(cfg.n_layers):
+            bp = jax.tree.map(lambda a: a[li], params["dec_blocks"])
+            x = one(x, bp)
+    else:
+        def body(x, bp):
+            return one(x, bp), None
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    return layer_norm(x, params["dec_ln"]["w"], params["dec_ln"]["b"])
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, unroll: bool = False, seq_chunk: int = 512):
+    enc_out = encode(params, cfg, batch["frames"], unroll=unroll)
+    h = decoder_forward(params, cfg, batch["tokens"], enc_out, unroll=unroll)
+    logits = (h @ params["embed"].T.astype(h.dtype)).astype(jnp.float32)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return (lse - gold).mean()
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, enc_len: int):
+    """Self-KV (ring over max_decoder_len) + static cross-KV per layer."""
+    L = cfg.n_layers
+    cd = cfg.cdtype
+    t = cfg.max_decoder_len
+    return {
+        "self_k": jnp.zeros((L, batch, t, cfg.n_kv_heads, cfg.hd), cd),
+        "self_v": jnp.zeros((L, batch, t, cfg.n_kv_heads, cfg.hd), cd),
+        "self_kpos": jnp.full((L, batch, t), -1, jnp.int32),
+        "cross_k": jnp.zeros((L, batch, enc_len, cfg.n_kv_heads, cfg.hd), cd),
+        "cross_v": jnp.zeros((L, batch, enc_len, cfg.n_kv_heads, cfg.hd), cd),
+    }
+
+
+def decode_step(params, cfg: ArchConfig, state, token, pos, *, unroll: bool = False):
+    """One decoder token against precomputed cross-KV. token [B,1], pos [B]."""
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0).astype(cfg.cdtype)
+    pos_emb = jnp.take(params["dec_pos"], jnp.minimum(pos, cfg.max_decoder_len - 1),
+                       axis=0)[:, None]
+    x = x + pos_emb.astype(cfg.cdtype)
+
+    def body(x, xs):
+        bp, sk, sv, skp, ck, cv = xs
+        a_in = layer_norm(x, bp["ln1"]["w"], bp["ln1"]["b"])
+        cache = KVCache(k=sk, v=sv, kpos=skp)
+        y, c2 = attention_decode(bp["attn"], a_in, cache, pos, n_heads=cfg.n_heads,
+                                 n_kv=cfg.n_kv_heads, head_dim=cfg.hd, rope_theta=None)
+        x = x + y
+        x_in = layer_norm(x, bp["ln_x"]["w"], bp["ln_x"]["b"])
+        xcache = KVCache(k=ck, v=cv, kpos=jnp.zeros(ck.shape[:2], jnp.int32))
+        y, _ = attention_decode(bp["xattn"], x_in, xcache, pos, n_heads=cfg.n_heads,
+                                n_kv=cfg.n_kv_heads, head_dim=cfg.hd, rope_theta=None,
+                                cross=True)
+        x = x + y
+        m_in = layer_norm(x, bp["ln2"]["w"], bp["ln2"]["b"])
+        x = x + gelu_mlp(bp["mlp"], m_in)
+        return x, (c2.k, c2.v, c2.kpos)
+
+    from .transformer import _scan
+    x, outs = _scan(body, x, (params["dec_blocks"], state["self_k"],
+                              state["self_v"], state["self_kpos"],
+                              state["cross_k"], state["cross_v"]), unroll)
+    h = layer_norm(x, params["dec_ln"]["w"], params["dec_ln"]["b"])
+    logits = (h @ params["embed"].T.astype(h.dtype))[:, 0]
+    new = {"self_k": outs[0], "self_v": outs[1], "self_kpos": outs[2],
+           "cross_k": state["cross_k"], "cross_v": state["cross_v"]}
+    return logits, new

@@ -1,0 +1,130 @@
+"""Optimizers from scratch (no optax in this environment).
+
+SGD(+momentum), AdamW, and ProxSGD — the paper's training rule (eq. (7)):
+a gradient step followed by the group-lasso proximal operator (eq. (8)) on the
+regularized matrices.  All are pytree-in/pytree-out with explicit state, so
+optimizer state inherits parameter sharding (ZeRO via the sharding policy).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.group_lasso import group_prox_rows
+
+__all__ = ["sgd", "adamw", "prox_sgd", "global_norm", "clip_by_global_norm",
+           "step_decay", "cosine_warmup", "Optimizer"]
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]  # (grads, state, params, lr) -> (params, state)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def sgd(momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, lr):
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        params = jax.tree.map(lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+                              params, mu)
+        return params, {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1 - b1**t.astype(jnp.float32)
+        bc2 = 1 - b2**t.astype(jnp.float32)
+
+        def upd(p, m, v):
+            step = lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            p32 = p.astype(jnp.float32)
+            if weight_decay:
+                step = step + lr * weight_decay * p32
+            return (p32 - step).astype(p.dtype)
+
+        params = jax.tree.map(upd, params, m, v)
+        return params, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def prox_sgd(momentum: float = 0.9,
+             prox_spec: dict[str, tuple[float, str]] | None = None) -> Optimizer:
+    """Paper eq. (7): SGD step then block soft threshold on regularized weights.
+
+    prox_spec: {path-substring: (lambda, mode)}, mode in {"columns", "rows"} —
+    which axis forms the groups ("columns" = input neurons, the dense-layer
+    choice of Sec. III-B).  Threshold = lr * lambda (the eq. (8) scaling).
+    """
+    base = sgd(momentum)
+    spec = prox_spec or {}
+
+    def update(grads, state, params, lr):
+        params, state = base.update(grads, state, params, lr)
+        if not spec:
+            return params, state
+        flat = jax.tree_util.tree_flatten_with_path(params)
+        leaves = []
+        for path, leaf in flat[0]:
+            name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+            for pat, (lam, mode) in spec.items():
+                if pat in name and leaf.ndim == 2:
+                    t = lr * lam
+                    if mode == "columns":
+                        leaf = group_prox_rows(leaf.T, t).T
+                    else:
+                        leaf = group_prox_rows(leaf, t)
+                    break
+            leaves.append(leaf)
+        params = jax.tree_util.tree_unflatten(flat[1], leaves)
+        return params, state
+
+    return Optimizer(base.init, update)
+
+
+def step_decay(base_lr: float, decay: float = 0.95, every: int = 10):
+    """The paper's MLP schedule: x0.95 every 10 epochs."""
+    def lr(epoch):
+        return base_lr * decay ** (epoch // every)
+    return lr
+
+
+def cosine_warmup(base_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * base_lr + (1 - floor) * base_lr * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

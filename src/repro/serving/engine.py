@@ -1,0 +1,128 @@
+"""Batched serving engine: prefill + decode with slot-based continuous batching.
+
+The engine keeps a fixed decode batch of ``n_slots``; finished sequences free
+their slot and queued requests are prefilled into it (KV written at their
+positions).  Greedy or temperature sampling.  Works for every decode-capable
+family through models.api; the compressed-serving example swaps projection
+matvecs for LCC kernels at the model level.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import api, transformer
+
+__all__ = ["ServingEngine", "GenerationResult"]
+
+
+@dataclass
+class GenerationResult:
+    tokens: list[int]
+    prompt_len: int
+    finished: bool
+
+
+class ServingEngine:
+    def __init__(self, params, cfg: ArchConfig, *, n_slots: int = 8,
+                 max_len: int = 512, eos_id: int | None = None,
+                 temperature: float = 0.0, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.eos = eos_id
+        self.temp = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.state = api.init_decode_state(cfg, n_slots, max_len)
+        self.pos = np.zeros(n_slots, np.int64)
+        self.active = np.zeros(n_slots, bool)
+        self.results: dict[int, GenerationResult] = {}
+        self.slot_req: dict[int, int] = {}
+        self._next_req = 0
+        self._decode = jax.jit(lambda p, s, t, pos: api.decode(p, cfg, s, t, pos))
+
+    # ------------------------------------------------------------------ API
+    def submit(self, prompt: list[int]) -> int:
+        """Prefill a prompt into a free slot; returns request id."""
+        free = np.where(~self.active)[0]
+        if free.size == 0:
+            raise RuntimeError("no free slots; call step() until one finishes")
+        slot = int(free[0])
+        rid = self._next_req
+        self._next_req += 1
+        # prefill token-by-token through decode (single-request path keeps the
+        # cache layout identical; bulk prefill via forward() feeds training)
+        for t, tok in enumerate(prompt):
+            logits, self.state = self._decode(
+                self.params, self.state,
+                self._token_batch(slot, tok), self._pos_batch(slot, t))
+        self.pos[slot] = len(prompt)
+        self.active[slot] = True
+        self.slot_req[slot] = rid
+        self.results[rid] = GenerationResult(tokens=list(prompt),
+                                             prompt_len=len(prompt), finished=False)
+        self._last_logits = logits
+        return rid
+
+    def step(self) -> None:
+        """One decode step for every active slot."""
+        if not self.active.any():
+            return
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        for slot in np.where(self.active)[0]:
+            rid = self.slot_req[slot]
+            toks[slot, 0] = self.results[rid].tokens[-1]
+        logits, self.state = self._decode(self.params, self.state,
+                                          jnp.asarray(toks),
+                                          jnp.asarray(self.pos - 1, jnp.int32))
+        logits = np.asarray(logits, np.float32)
+        for slot in np.where(self.active)[0]:
+            rid = self.slot_req[slot]
+            nxt = self._sample(logits[slot])
+            r = self.results[rid]
+            r.tokens.append(int(nxt))
+            self.pos[slot] += 1
+            done = (self.eos is not None and nxt == self.eos) or \
+                (len(r.tokens) - r.prompt_len >= self.max_new) or \
+                (self.pos[slot] >= self.max_len)
+            if done:
+                r.finished = True
+                self.active[slot] = False
+
+    def generate(self, prompts: list[list[int]], max_new_tokens: int = 32
+                 ) -> list[GenerationResult]:
+        """Continuous-batched generation over a request list."""
+        self.max_new = max_new_tokens
+        queue = list(enumerate(prompts))
+        rid_map = {}
+        while queue or self.active.any():
+            while queue and (~self.active).any():
+                i, prompt = queue.pop(0)
+                rid_map[self.submit(prompt)] = i
+            self.step()
+        out: list[GenerationResult | None] = [None] * len(prompts)
+        for rid, i in rid_map.items():
+            out[i] = self.results[rid]
+        return out  # type: ignore[return-value]
+
+    # -------------------------------------------------------------- helpers
+    def _token_batch(self, slot: int, tok: int):
+        t = np.zeros((self.n_slots, 1), np.int32)
+        t[slot, 0] = tok
+        return jnp.asarray(t)
+
+    def _pos_batch(self, slot: int, pos: int):
+        p = np.asarray(self.pos - 1, np.int64).clip(0)
+        p[slot] = pos
+        return jnp.asarray(p, jnp.int32)
+
+    def _sample(self, logits: np.ndarray) -> int:
+        if self.temp <= 0:
+            return int(np.argmax(logits))
+        self.key, k = jax.random.split(self.key)
+        return int(jax.random.categorical(k, jnp.asarray(logits) / self.temp))

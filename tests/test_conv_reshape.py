@@ -1,0 +1,51 @@
+"""FK / PK conv->CMVM reshaping equals the real convolution (paper Sec. III-D)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.conv_reshape import (conv_fk_matrices, conv_forward_fk,
+                                     conv_forward_pk, conv_forward_reference,
+                                     conv_layer_adds, conv_pk_matrices,
+                                     fk_group_matrix, pk_group_matrix)
+
+
+@pytest.mark.parametrize("n,k,o,z", [(4, 3, 3, 8), (2, 5, 3, 6), (6, 2, 5, 9)])
+def test_fk_equals_conv(n, k, o, z):
+    rng = np.random.default_rng(0)
+    kernel = rng.standard_normal((n, k, o, o)).astype(np.float32)
+    x = rng.standard_normal((2, k, z, z)).astype(np.float32)
+    ref = conv_forward_reference(jnp.asarray(x), jnp.asarray(kernel))
+    fk = conv_forward_fk(jnp.asarray(x), jnp.asarray(conv_fk_matrices(kernel)))
+    np.testing.assert_allclose(np.asarray(fk), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("n,k,o,z", [(4, 3, 3, 8), (2, 5, 3, 6)])
+def test_pk_equals_conv(n, k, o, z):
+    rng = np.random.default_rng(1)
+    kernel = rng.standard_normal((n, k, o, o)).astype(np.float32)
+    x = rng.standard_normal((2, k, z, z)).astype(np.float32)
+    ref = conv_forward_reference(jnp.asarray(x), jnp.asarray(kernel))
+    pk = conv_forward_pk(jnp.asarray(x), jnp.asarray(conv_pk_matrices(kernel)), n_out=n)
+    np.testing.assert_allclose(np.asarray(pk), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_pk_matrices_are_taller():
+    kernel = np.zeros((8, 4, 3, 3))
+    fk = conv_fk_matrices(kernel)
+    pk = conv_pk_matrices(kernel)
+    assert fk.shape == (4, 8, 9)
+    assert pk.shape == (4, 24, 3)
+    assert pk.shape[1] / pk.shape[2] > fk.shape[1] / fk.shape[2]  # taller => LCC-friendlier
+
+
+def test_group_matrices_shapes():
+    kernel = np.zeros((8, 4, 3, 3))
+    assert fk_group_matrix(kernel).shape == (32, 9)
+    assert pk_group_matrix(kernel).shape == (96, 3)
+
+
+def test_conv_layer_adds_accounting():
+    per = [10, 10, 10]
+    assert conv_layer_adds(per, n_out=4, o=3, method="fk") == 30 + 4 * 2
+    assert conv_layer_adds(per, n_out=4, o=3, method="pk") == 30 + 4 * 2 + 4 * 2
+    assert conv_layer_adds(per, n_out=4, o=3, method="fk", n_channels_nonzero=1) == 30

@@ -1,0 +1,67 @@
+"""CSD/NAF recoding: exact reconstruction, canonical-form properties, counts."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.csd import (adds_csd_matrix, adds_csd_rowwise, csd_digit_count,
+                            csd_digits, quantization_snr_db, quantize_fixed)
+
+
+def test_digits_reconstruct_exactly():
+    for v in [0.0, 1.0, -1.0, 0.375, 2.0, 3.75, -5.8125, 100.25]:
+        digits = csd_digits(v, frac_bits=8)
+        rec = sum(s * 2.0**e for e, s in digits)
+        assert rec == quantize_fixed(np.array(v), 8)
+
+
+@given(st.integers(min_value=-(2**40), max_value=2**40))
+@settings(max_examples=200, deadline=None)
+def test_naf_properties(n):
+    """NAF: reconstructs n; no two adjacent nonzero digits; digits in {-1,+1}."""
+    digits = csd_digits(float(n), frac_bits=0)
+    rec = sum(s * 2**e for e, s in digits)
+    assert rec == n
+    positions = sorted(e for e, _ in digits)
+    assert all(b - a >= 2 for a, b in zip(positions, positions[1:]))
+    assert all(s in (-1, 1) for _, s in digits)
+
+
+@given(st.integers(min_value=-(2**30), max_value=2**30))
+@settings(max_examples=200, deadline=None)
+def test_naf_weight_minimal_vs_binary(n):
+    """NAF nonzero count never exceeds the plain binary 1-bit count."""
+    naf = len(csd_digits(float(n), frac_bits=0))
+    binary = bin(abs(n)).count("1")
+    assert naf <= binary
+
+
+def test_digit_count_vectorized_matches_scalar():
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((13, 7)) * 4
+    counts = csd_digit_count(w, frac_bits=8)
+    for i in range(13):
+        for j in range(7):
+            assert counts[i, j] == len(csd_digits(w[i, j], 8))
+
+
+def test_adds_matrix_formula():
+    w = np.array([[2.0, 0.375], [3.75, 1.0]])  # the paper's eq. (2) example
+    # digits: 2.0 -> 1, 0.375 -> 2 (0.5 - 0.125), 3.75 -> 2 (4 - 0.25), 1 -> 1
+    rows = adds_csd_rowwise(w, frac_bits=8)
+    assert rows.tolist() == [2, 2]  # paper: two adds + two subtractions total
+    assert adds_csd_matrix(w, 8) == 4
+
+
+def test_zero_rows_cost_nothing():
+    w = np.zeros((4, 5))
+    w[0, 0] = 1.0
+    assert adds_csd_matrix(w, 8) == 0  # single digit row: 0 additions
+
+
+def test_quantization_snr_monotone_in_bits():
+    rng = np.random.default_rng(1)
+    w = rng.standard_normal((40, 40))
+    snrs = [quantization_snr_db(w, b) for b in (4, 6, 8, 10)]
+    assert all(b > a for a, b in zip(snrs, snrs[1:]))
+    assert 25 < snrs[1] < 55  # ~6 dB/bit ballpark (6 bits -> ~44 dB +- headroom)

@@ -1,0 +1,101 @@
+"""Group-lasso prox (eq. (8)) + weight sharing (Sec. III-C) invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.group_lasso import (group_prox_rows, group_prox_rows_np,
+                                    prox_dense_columns_np)
+from repro.core.weight_sharing import (SharedLayer, affinity_propagation,
+                                       centroid_grad_from_member_grads,
+                                       cluster_columns, shared_matvec)
+
+
+def test_prox_closed_form():
+    a = np.array([[3.0, 4.0], [0.3, 0.4], [0.0, 0.0]])  # row norms 5, 0.5, 0
+    out = group_prox_rows_np(a, 1.0)
+    np.testing.assert_allclose(out[0], [3.0 * 0.8, 4.0 * 0.8])
+    np.testing.assert_allclose(out[1], [0.0, 0.0])  # below threshold: killed
+    np.testing.assert_allclose(out[2], [0.0, 0.0])
+
+
+def test_prox_jax_matches_numpy():
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((17, 9))
+    np.testing.assert_allclose(np.asarray(group_prox_rows(jnp.asarray(a), 0.7)),
+                               group_prox_rows_np(a, 0.7), rtol=1e-6)
+
+
+@given(st.floats(min_value=0.0, max_value=5.0),
+       st.integers(min_value=0, max_value=2**31))
+@settings(max_examples=50, deadline=None)
+def test_prox_shrinks_norms(t, seed):
+    """prox is a shrinkage: ||prox(a)_i|| == max(||a_i|| - t, 0)."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((8, 5)) * rng.uniform(0.1, 3)
+    out = group_prox_rows_np(a, t)
+    n_in = np.linalg.norm(a, axis=1)
+    n_out = np.linalg.norm(out, axis=1)
+    np.testing.assert_allclose(n_out, np.maximum(n_in - t, 0.0), atol=1e-9)
+
+
+def test_prox_columns_prunes_input_neurons():
+    rng = np.random.default_rng(1)
+    w = rng.standard_normal((20, 10))
+    w[:, 3] *= 0.01  # weak input neuron
+    out = prox_dense_columns_np(w, 0.5)
+    assert np.allclose(out[:, 3], 0.0)
+    assert not np.allclose(out[:, 0], 0.0)
+
+
+def test_affinity_propagation_obvious_clusters():
+    rng = np.random.default_rng(2)
+    centers = rng.standard_normal((3, 6)) * 5
+    pts = np.concatenate([centers[i] + 0.05 * rng.standard_normal((10, 6))
+                          for i in range(3)])
+    d2 = ((pts[:, None] - pts[None]) ** 2).sum(-1)
+    labels = affinity_propagation(-d2)
+    # all points of one true cluster share a label and clusters differ
+    for i in range(3):
+        assert len(set(labels[10 * i:10 * (i + 1)].tolist())) == 1
+    assert len({labels[0], labels[10], labels[20]}) == 3
+
+
+def test_eq10_exact_equality():
+    """W x == sum_i g_i sum_{j in I_i} x_j when W's columns equal the centroids."""
+    rng = np.random.default_rng(3)
+    cents = rng.standard_normal((12, 4))
+    labels = rng.integers(0, 4, 30)
+    w = cents[:, labels]
+    x = rng.standard_normal((30,))
+    y = np.asarray(shared_matvec(jnp.asarray(cents), jnp.asarray(labels), jnp.asarray(x)))
+    np.testing.assert_allclose(y, w @ x, rtol=1e-5)
+
+
+def test_pre_aggregation_adds():
+    layer = SharedLayer(centroids=np.zeros((4, 3)),
+                        labels=np.array([0, 0, 1, 1, 1, 2]))
+    # cluster sizes 2,3,1 -> (2-1)+(3-1)+(1-1) = 3 adds
+    assert layer.pre_aggregation_adds() == 3
+
+
+def test_centroid_grad_is_member_mean():
+    """Eq. (9): centroid gradient = mean of member-column gradients."""
+    rng = np.random.default_rng(4)
+    g = rng.standard_normal((6, 5))
+    labels = np.array([0, 1, 0, 1, 1])
+    out = np.asarray(centroid_grad_from_member_grads(jnp.asarray(g), labels, 2))
+    np.testing.assert_allclose(out[:, 0], g[:, [0, 2]].mean(1), rtol=1e-6)
+    np.testing.assert_allclose(out[:, 1], g[:, [1, 3, 4]].mean(1), rtol=1e-6)
+
+
+def test_cluster_columns_recovers_duplicates():
+    rng = np.random.default_rng(5)
+    base = rng.standard_normal((16, 4))
+    labels_true = np.repeat(np.arange(4), 5)
+    w = base[:, labels_true] + 1e-3 * rng.standard_normal((16, 20))
+    labels, cents = cluster_columns(w)
+    assert cents.shape[1] == 4
+    err = np.linalg.norm(cents[:, labels] - w) / np.linalg.norm(w)
+    assert err < 0.01

@@ -1,0 +1,106 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lcc import lcc_decompose
+from repro.kernels import ops, ref
+from repro.kernels.group_prox import group_prox
+from repro.kernels.lcc_matmul import lcc_factor_matmul
+from repro.kernels.shared_matmul import cluster_segment_sum
+
+
+@pytest.mark.parametrize("n,k,b,s", [(128, 128, 128, 2), (256, 128, 64, 3),
+                                     (128, 256, 32, 4), (384, 128, 128, 2)])
+def test_lcc_factor_matmul_shapes(n, k, b, s):
+    rng = np.random.default_rng(n + k + b)
+    idx = jnp.asarray(rng.integers(0, k, (n, s)), jnp.int32)
+    exp = jnp.asarray(rng.integers(-8, 8, (n, s)), jnp.int8)
+    sign = jnp.asarray(rng.choice([-1, 0, 1], (n, s)), jnp.int8)
+    x = jnp.asarray(rng.standard_normal((k, b)), jnp.float32)
+    got = lcc_factor_matmul(idx, exp, sign, x, block_n=128, block_k=128, block_b=min(b, 128))
+    want = ref.lcc_factor_matmul_ref(idx, exp, sign, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lcc_factor_matmul_dtypes(dtype):
+    rng = np.random.default_rng(7)
+    n, k, b, s = 128, 128, 128, 2
+    idx = jnp.asarray(rng.integers(0, k, (n, s)), jnp.int32)
+    exp = jnp.asarray(rng.integers(-6, 6, (n, s)), jnp.int8)
+    sign = jnp.asarray(rng.choice([-1, 1], (n, s)), jnp.int8)
+    x = jnp.asarray(rng.standard_normal((k, b)), dtype)
+    got = lcc_factor_matmul(idx, exp, sign, x)
+    want = ref.lcc_factor_matmul_ref(idx, exp, sign, x.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=2e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+def test_chain_apply_matches_decomposition():
+    rng = np.random.default_rng(8)
+    w = rng.standard_normal((96, 24))
+    dec = lcc_decompose(w, algorithm="fp", target_snr_db=40.0)
+    packed = ops.pack_decomposition(dec)
+    x = jnp.asarray(rng.standard_normal((24, 7)), jnp.float32)
+    got = np.asarray(ops.apply_packed_decomposition(packed, x))
+    want = dec.to_dense() @ np.asarray(x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("k,b,c", [(128, 128, 128), (256, 64, 128), (128, 32, 256)])
+def test_cluster_segment_sum(k, b, c):
+    rng = np.random.default_rng(k + b + c)
+    labels = jnp.asarray(rng.integers(0, c, k), jnp.int32)
+    x = jnp.asarray(rng.standard_normal((k, b)), jnp.float32)
+    got = cluster_segment_sum(labels, x, num_clusters=c)
+    want = ref.cluster_segment_sum_ref(labels, x, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_shared_matmul_unaligned():
+    """ops wrapper pads ragged (K, C, B) to block multiples."""
+    rng = np.random.default_rng(9)
+    cents = jnp.asarray(rng.standard_normal((33, 10)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 10, 50), jnp.int32)
+    x = jnp.asarray(rng.standard_normal((50, 9)), jnp.float32)
+    got = np.asarray(ops.shared_matmul_tpu(cents, labels, x))
+    want = np.asarray(cents) @ np.asarray(ref.cluster_segment_sum_ref(labels, x, 10))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("g,m", [(256, 64), (512, 33), (256, 301)])
+@pytest.mark.parametrize("t", [0.0, 0.5, 10.0])
+def test_group_prox_kernel(g, m, t):
+    rng = np.random.default_rng(g + m)
+    a = jnp.asarray(rng.standard_normal((g, m)), jnp.float32)
+    got = group_prox(a, t)
+    want = ref.group_prox_ref(a, t)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_group_prox_bf16():
+    rng = np.random.default_rng(11)
+    a = jnp.asarray(rng.standard_normal((256, 128)), jnp.bfloat16)
+    got = group_prox(a, 1.3)
+    want = ref.group_prox_ref(a, 1.3)
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_factor_stream_roundtrip():
+    """Deployment byte stream: serialize -> parse -> identical dense factor."""
+    rng = np.random.default_rng(12)
+    w = rng.standard_normal((64, 8))
+    dec = lcc_decompose(w, algorithm="fp", target_snr_db=35.0)
+    from repro.core.lcc import LCCChain
+    chain = next(s for s in dec.slices if isinstance(s, LCCChain))
+    for f in chain.factors:
+        blob = ops.factor_to_stream(f)
+        f2 = ops.stream_to_factor(blob)
+        np.testing.assert_array_equal(f.to_dense(), f2.to_dense())
+        # stream size ~= the 3-bytes-per-term model (+1/row +12 header)
+        nnz = int((f.sign != 0).sum())
+        assert len(blob) == 12 + f.out_dim + 3 * nnz

@@ -1,0 +1,110 @@
+"""Optimizers, schedules, ProxSGD pruning, grad accumulation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.optimizers import (adamw, clip_by_global_norm, cosine_warmup,
+                                    global_norm, prox_sgd, sgd, step_decay)
+
+
+def _quad_problem():
+    target = jnp.asarray(np.random.default_rng(0).standard_normal((8, 8)), jnp.float32)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    return {"w": jnp.zeros((8, 8))}, loss, target
+
+
+def test_sgd_converges():
+    params, loss, target = _quad_problem()
+    opt = sgd(momentum=0.9)
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, 0.05)
+    assert float(loss(params)) < 1e-3
+
+
+def test_adamw_converges():
+    params, loss, target = _quad_problem()
+    opt = adamw()
+    state = opt.init(params)
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, 0.05)
+    assert float(loss(params)) < 1e-2
+
+
+def test_adamw_weight_decay_shrinks():
+    opt = adamw(weight_decay=0.5)
+    params = {"w": jnp.ones((4,))}
+    state = opt.init(params)
+    zero_g = {"w": jnp.zeros((4,))}
+    p2, _ = opt.update(zero_g, state, params, 0.1)
+    assert float(p2["w"][0]) < 1.0
+
+
+def test_prox_sgd_prunes_columns():
+    """The paper's eq. (7): strong lambda zeroes weak input neurons."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((256, 10)), jnp.float32)
+    # labels depend only on features 0..4 => features 5..9 should be pruned
+    w_true = np.zeros((10,))
+    w_true[:5] = rng.standard_normal(5) * 2
+    y = jnp.asarray((np.asarray(x) @ w_true > 0).astype(np.int32))
+
+    params = {"fc1": {"w": jnp.asarray(rng.standard_normal((2, 10)) * 0.1, jnp.float32)}}
+
+    def loss(p):
+        logits = x @ p["fc1"]["w"].T
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+        return (lse - gold).mean()
+
+    opt = prox_sgd(momentum=0.9, prox_spec={"fc1/w": (1.0, "columns")})
+    state = opt.init(params)
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, 0.05)
+    w = np.asarray(params["fc1"]["w"])
+    col_norms = np.linalg.norm(w, axis=0)
+    assert (col_norms[5:] < 1e-6).all()  # irrelevant inputs pruned
+    assert (col_norms[:5] > 1e-3).any()  # signal inputs survive
+    assert float(loss(params)) < 0.5
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    assert float(norm) > 1.0
+
+
+def test_schedules():
+    lr = step_decay(0.001, 0.95, 10)
+    assert lr(0) == 0.001
+    assert abs(lr(10) - 0.00095) < 1e-9
+    cw = cosine_warmup(1.0, warmup=10, total=100)
+    assert float(cw(5)) == 0.5
+    assert float(cw(100)) <= 0.11
+
+
+def test_grad_accumulation_matches_full_batch():
+    from repro.configs import get_arch, reduced_config
+    from repro.optim.optimizers import sgd
+    from repro.training.trainer import init_train_state, make_train_step
+    cfg = reduced_config(get_arch("olmo-1b"))
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (4, 16)), jnp.int32)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    opt = sgd(momentum=0.0)
+    s0 = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    step1 = make_train_step(cfg, opt, lr=0.1, accum_steps=1)
+    step2 = make_train_step(cfg, opt, lr=0.1, accum_steps=2)
+    s1, m1 = step1(s0, batch)
+    s2, m2 = step2(s0, batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-3
+    d = max(float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)))
+    assert d < 1e-3
