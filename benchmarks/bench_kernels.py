@@ -50,6 +50,31 @@ def run(csv_rows: list[str]) -> None:
         f"lcc_chain_apply,{us_chain:.0f},"
         f"stored_bytes={dec.storage_bytes()}_vs_dense_bf16={2 * 256 * 16}")
 
+    # fused whole-chain launch vs the legacy per-factor pallas_call loop vs a
+    # plain dense matmul, on a >=512-row FP decomposition (the acceptance
+    # shape).  One launch holds every intermediate in VMEM scratch; the loop
+    # round-trips each one through HBM (and per-launch overhead, in interpret
+    # mode the dominant cost it models).
+    w5 = rng.standard_normal((512, 16))
+    dec5 = lcc_decompose(w5, algorithm="fp", frac_bits=8)
+    packed5 = ops.pack_decomposition(dec5)
+    x5 = jnp.asarray(rng.standard_normal((16, 128)), jnp.float32)
+    w5_dense = jnp.asarray(dec5.to_dense(), jnp.float32)
+    us_fused = _time(lambda: ops.apply_packed_decomposition(packed5, x5))
+    us_loop = _time(lambda: ops.apply_packed_decomposition(packed5, x5, fused=False))
+    us_dense = _time(lambda: w5_dense @ x5)
+    n_factors = sum(len(s.factors) for s in dec5.slices)
+    csv_rows.append(f"lcc_chain_fused_512,{us_fused:.0f},"
+                    f"one_launch_{len(dec5.col_slices)}slices_{n_factors}factors")
+    csv_rows.append(f"lcc_chain_perfactor_512,{us_loop:.0f},"
+                    f"speedup_from_fusion={us_loop / us_fused:.1f}x")
+    csv_rows.append(f"lcc_chain_dense_matmul_512,{us_dense:.0f},"
+                    f"xla_oracle_stored_bytes={dec5.storage_bytes()}"
+                    f"_vs_{2 * 512 * 16}")
+    err = float(np.abs(np.asarray(ops.apply_packed_decomposition(packed5, x5))
+                       - dec5.apply(np.asarray(x5, np.float64))).max())
+    csv_rows.append(f"lcc_chain_fused_max_err,{err:.2e},vs_numpy_reference")
+
     a = jnp.asarray(rng.standard_normal((512, 256)), jnp.float32)
     us_prox = _time(lambda: group_prox(a, 0.5))
     us_prox_ref = _time(lambda: group_prox_ref(a, 0.5))
@@ -61,7 +86,7 @@ def run(csv_rows: list[str]) -> None:
     xx = jnp.asarray(rng.standard_normal((256, 128)), jnp.float32)
     us_sm = _time(lambda: ops.shared_matmul_tpu(cents, labels, xx))
     csv_rows.append(f"shared_matmul_interp,{us_sm:.0f},K256->C64_flop_ratio=4.0x")
-    for r in csv_rows[-6:]:
+    for r in csv_rows[-10:]:
         print(r, flush=True)
 
 

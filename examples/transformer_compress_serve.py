@@ -5,13 +5,11 @@ technique as a first-class feature of the serving stack.
     PYTHONPATH=src python examples/transformer_compress_serve.py [--steps 60]
 """
 import argparse
-from dataclasses import replace
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-import repro.core as core
 from repro.configs import get_arch, reduced_config
 from repro.data.synthetic import MarkovLM
 from repro.models import api
@@ -41,26 +39,26 @@ def main() -> None:
             print(f"   step {i:3d}  loss {float(m['loss']):.3f}")
     params = state.params
 
-    print("== 2. Algorithm 1 on every FFN projection ==")
-    report = core.ModelCostReport()
-    new_blocks = dict(params["blocks"])
-    for proj in ("gate", "up", "down"):
-        stack = np.asarray(params["blocks"]["ffn"][proj]["w"], np.float64)
-        out = []
-        for li in range(stack.shape[0]):
-            w = stack[li].T  # act as y = W x
-            cd = core.compress_dense_matrix(
-                f"ffn.{proj}.l{li}", w,
-                core.CompressionConfig(algorithm="fs", weight_sharing=True,
-                                       max_share_rel_err=0.06), report)
-            eff = np.zeros_like(w)
-            eff[:, cd.kept_columns] = cd.effective
-            out.append(eff.T.astype(np.float32))
-        new_blocks["ffn"] = dict(new_blocks.get("ffn", params["blocks"]["ffn"]))
-        new_blocks["ffn"][proj] = {"w": jnp.asarray(np.stack(out))}
-    params_c = dict(params)
-    params_c["blocks"] = {**params["blocks"], "ffn": new_blocks["ffn"]}
+    print("== 2. Algorithm 1 on every FFN projection (serving stack API) ==")
+    import repro.core as core
+    from repro.serving.engine import LCCMatvec, compress_ffn_for_serving
+    params_c, _matvecs, report = compress_ffn_for_serving(
+        params, cfg, build_matvecs=False)  # FS slices serve via dense fallback
     print(report.table())
+    # the fused whole-chain kernel needs FP chains: compress one projection
+    # with algorithm='fp' and check its kernel path against the dense map
+    w0 = np.asarray(params["blocks"]["ffn"]["gate"]["w"], np.float64)[0].T
+    cd_fp = core.compress_dense_matrix(
+        "ffn.gate.l0.fp", w0,
+        core.CompressionConfig(algorithm="fp", weight_sharing=True,
+                               max_share_rel_err=0.06))
+    mv = LCCMatvec(cd_fp)
+    xs = np.random.default_rng(1).standard_normal((cfg.d_model, 4))
+    drift = np.abs(np.asarray(mv(jnp.asarray(xs, jnp.float32)))
+                   - cd_fp.apply(xs)).max()
+    n_chains = len(mv.packed.col_slices)
+    print(f"   fused LCC kernel ({n_chains} FP chains, one launch) vs "
+          f"reference drift: {drift:.2e}")
 
     print("== 3. serve batched requests: original vs compressed ==")
     prompts = [lm.sample(1, 8, seed=100 + i)[0, :8].tolist() for i in range(6)]

@@ -285,16 +285,19 @@ def _fp_chain(
     larger per-row budget S converges in far fewer factors — and empirically
     often with *fewer total adds*.  We keep the cheapest chain that meets the
     target (or the best-SNR chain if none does)."""
-    best: LCCChain | None = None
-    best_adds = None
+    best_met: LCCChain | None = None
+    best_met_adds = None
+    best_any: LCCChain | None = None
+    best_any_snr = -np.inf
     for s in range(s_terms, s_terms + 3):
         chain = _fp_chain_fixed_s(w, s, target_snr_db, max_factors, exp_range)
-        met = snr_db(w, chain.to_dense()) >= target_snr_db
-        if met and (best_adds is None or chain.num_adds() < best_adds):
-            best, best_adds = chain, chain.num_adds()
-        if best is None:
-            best = chain  # fallback: best effort so far
-    return best
+        cur = snr_db(w, chain.to_dense())
+        if cur >= target_snr_db and (best_met_adds is None
+                                     or chain.num_adds() < best_met_adds):
+            best_met, best_met_adds = chain, chain.num_adds()
+        if cur > best_any_snr or best_any is None:
+            best_any, best_any_snr = chain, cur
+    return best_met if best_met is not None else best_any
 
 
 # --------------------------------------------------------------------------

@@ -17,6 +17,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 __all__ = ["set_mesh", "get_mesh", "constrain", "mesh_context"]
 
 _MESH: Mesh | None = None
@@ -63,14 +65,7 @@ def constrain(x, *axes):
         return x
     # axes already "manual" at this trace point (inside shard_map bodies, e.g.
     # the pod axis under compressed-gradient training) must not be referenced
-    manual: set = set()
-    try:
-        am = jax.sharding.get_abstract_mesh()
-        if am is not None and am.axis_names:
-            manual = {n for n, t in zip(am.axis_names, am.axis_types)
-                      if t == jax.sharding.AxisType.Manual}
-    except Exception:
-        pass
+    manual = compat.manual_axis_names()
     spec = []
     for dim, ax in zip(x.shape, axes):
         if ax is None:

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 __all__ = ["overlapped_ag_matmul"]
 
 
@@ -46,6 +48,6 @@ def overlapped_ag_matmul(x, w_sharded, *, mesh: Mesh, axis: str = "model"):
         (acc, _), _ = jax.lax.scan(step, (acc0, w), jnp.arange(n))
         return acc.astype(x.dtype)
 
-    fn = jax.shard_map(inner, mesh=mesh, in_specs=(P(), P(axis, None)),
-                       out_specs=P(), check_vma=False)
+    fn = compat.shard_map(inner, mesh=mesh, in_specs=(P(), P(axis, None)),
+                          out_specs=P(), check_vma=False)
     return fn(x, w_sharded)

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 __all__ = ["gpipe_forward", "split_stages"]
 
 
@@ -82,6 +84,6 @@ def gpipe_forward(stage_params, x_microbatches, stage_fn, *, mesh: Mesh,
         return buf
 
     spec_p = jax.tree.map(lambda _: P(axis), stage_params)
-    fn = jax.shard_map(per_stage, mesh=mesh, in_specs=(spec_p, P()), out_specs=P(),
-                       check_vma=False)
+    fn = compat.shard_map(per_stage, mesh=mesh, in_specs=(spec_p, P()),
+                          out_specs=P(), check_vma=False)
     return fn(stage_params, x_microbatches)

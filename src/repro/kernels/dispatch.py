@@ -1,0 +1,23 @@
+"""Kernel dispatch policy: compiled Pallas on TPU, interpreter elsewhere.
+
+Every kernel in this package takes ``interpret: bool | None = None``.  ``None``
+resolves through :func:`default_interpret` at trace time — compiled Mosaic
+when the default jax backend is TPU, the Pallas interpreter on CPU/GPU — so
+one call site runs correctly on the production accelerator and in local/CI
+containers alike.  Pass an explicit bool to override (e.g. ``interpret=True``
+on TPU to debug a kernel numerically).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["default_interpret", "resolve_interpret"]
+
+
+def default_interpret() -> bool:
+    """True when the default backend cannot run compiled Pallas TPU kernels."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .dispatch import resolve_interpret
+
 __all__ = ["group_prox"]
 
 
@@ -33,7 +35,7 @@ def group_prox(
     a: jnp.ndarray,
     thresh: jnp.ndarray | float,
     block_g: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Block soft threshold over rows of ``a`` [G, M] with threshold ``thresh``."""
     g, m = a.shape
@@ -50,5 +52,5 @@ def group_prox(
         ],
         out_specs=pl.BlockSpec((block_g, m), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((g, m), a.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(a, t)

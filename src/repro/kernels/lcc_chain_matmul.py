@@ -1,0 +1,143 @@
+"""Pallas TPU kernel: fused whole-chain LCC evaluation  y = sum_e (F_P ... F_1) x_e.
+
+The paper's value proposition is that an LCC factor chain is *cheaper than the
+dense matmul it replaces* — but launching one ``pallas_call`` per factor (the
+pre-fusion runtime) round-trips every intermediate through HBM, exactly the
+memory traffic that dominates compressed-inference cost.  This kernel applies
+an entire FP decomposition — every factor of every vertical slice (paper
+eq. (3)) — in ONE launch, holding the running vector in VMEM scratch the whole
+way; only the inputs' compact (idx, exp, sign) streams and the final output
+tile touch HBM.
+
+Packed multi-slice layout (built by ``repro.kernels.ops.pack_decomposition``):
+
+  idx  [E, P, N_pad, S] int32  column index of term s of row n, factor p, slice e
+  exp  [E, P, N_pad, S] int8   exponent (power of two)
+  sign [E, P, N_pad, S] int8   {-1, 0, +1}; 0 marks an unused slot / padded row
+  x    [E, D_pad, B_pad] f32   slice inputs, zero-padded rows
+  out  [N_pad, B_pad] f32      accumulated over slices e
+
+with ``D_pad = max(N_pad, max slice width, padded)`` the width of the running
+vector carried in scratch.  Chains shorter than P are right-padded with
+identity factors (idx[n] = n, sign = [1, 0, ...]); rows beyond a factor's true
+``out_dim`` carry sign == 0 everywhere, so they decompress to zero rows and
+stay exactly zero through the chain.
+
+Grid (b_blocks, E): slices are the fastest axis, so the output tile for a
+given b block is revisited across e and accumulated in place (same revisit
+pattern as the contraction axis of ``lcc_matmul``).  Per grid step, compiled
+mode decompresses each factor into a dense [N_pad, width] VMEM tile via the
+vectorized one-hot * 2^exp construction and feeds the MXU — compute stays
+systolic, intermediates never leave the chip.  Interpreter (CPU/GPU) mode
+evaluates the same chain by direct term gather (S reads per row) instead,
+since there is no systolic array to amortize the dense tile — both paths
+compute the identical sum_s sign * 2^exp * prev[idx].
+
+``interpret=None`` auto-detects: compiled on TPU, interpreter elsewhere (see
+``repro.kernels.dispatch``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .dispatch import resolve_interpret
+
+__all__ = ["lcc_chain_matmul"]
+
+
+def _kernel(idx_ref, exp_ref, sign_ref, x_ref, o_ref, cur_ref, *,
+            p_factors: int, s_terms: int, n_pad: int, d_pad: int,
+            first_width: int, use_gather: bool):
+    e = pl.program_id(1)
+
+    @pl.when(e == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    cur_ref[...] = x_ref[...]  # [D_pad, bb] slice input, zero-padded rows
+    for p in range(p_factors):
+        idx = idx_ref[p]  # [N_pad, S]
+        val = sign_ref[p].astype(jnp.float32) * \
+            jnp.exp2(exp_ref[p].astype(jnp.float32))  # 2^e exact in f32
+        # factor p reads only the live prefix of the running vector: the slice
+        # width for p == 0 (sign==0 padding guarantees idx < first_width
+        # there), the previous factor's rows afterwards
+        width = first_width if p == 0 else n_pad
+        if use_gather:
+            # interpreter path: direct term gather — S reads/row, no dense tile
+            g = cur_ref[...][idx.reshape(-1)]  # [N_pad*S, bb]
+            y = jnp.sum(val.reshape(n_pad, s_terms, 1)
+                        * g.reshape(n_pad, s_terms, -1), axis=1)
+        else:
+            # compiled path: one-hot decompress into a dense [N_pad, width]
+            # VMEM tile and feed the MXU — compute stays systolic
+            cols = jax.lax.broadcasted_iota(jnp.int32, (n_pad, width), 1)
+            tile = jnp.zeros((n_pad, width), jnp.float32)
+            for s in range(s_terms):
+                hit = (idx[:, s][:, None] == cols).astype(jnp.float32)
+                tile = tile + hit * val[:, s][:, None]
+            y = jnp.dot(tile, cur_ref[0:width, :],
+                        preferred_element_type=jnp.float32)
+        cur_ref[0:n_pad, :] = y  # intermediate stays resident in VMEM
+        if d_pad > n_pad:
+            cur_ref[n_pad:d_pad, :] = jnp.zeros((d_pad - n_pad, y.shape[1]),
+                                                jnp.float32)
+    o_ref[...] += cur_ref[0:n_pad, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "first_width",
+                                             "interpret", "use_gather"))
+def lcc_chain_matmul(
+    idx: jnp.ndarray,
+    exp: jnp.ndarray,
+    sign: jnp.ndarray,
+    x: jnp.ndarray,
+    block_b: int = 128,
+    first_width: int | None = None,
+    interpret: bool | None = None,
+    use_gather: bool | None = None,
+) -> jnp.ndarray:
+    """y[N_pad, B_pad] = sum_e chain_e(x[e]) — whole decomposition, one launch.
+
+    ``first_width``: padded max slice width (columns the first factor of any
+    chain can address); defaults to D_pad.  Tightening it shrinks the first
+    factor's decompress tile from [N_pad, D_pad] to [N_pad, first_width].
+    ``use_gather``: force the decompress formulation (default: gather when
+    interpreting, one-hot/MXU when compiled); exposed so the compiled
+    formulation stays testable under the interpreter.
+    """
+    e_slices, p_factors, n_pad, s_terms = idx.shape
+    xe, d_pad, b_pad = x.shape
+    if xe != e_slices:
+        raise ValueError(f"slice count mismatch: idx has {e_slices}, x has {xe}")
+    if d_pad < n_pad:
+        raise ValueError(f"D_pad={d_pad} must cover N_pad={n_pad}")
+    first_width = d_pad if first_width is None else min(first_width, d_pad)
+    block_b = min(block_b, b_pad)
+    if b_pad % block_b:
+        raise ValueError(f"B_pad={b_pad} must tile by block_b={block_b}")
+    run_interpret = resolve_interpret(interpret)
+    if use_gather is None:
+        use_gather = run_interpret
+    grid = (b_pad // block_b, e_slices)
+    return pl.pallas_call(
+        functools.partial(_kernel, p_factors=p_factors, s_terms=s_terms,
+                          n_pad=n_pad, d_pad=d_pad, first_width=first_width,
+                          use_gather=use_gather),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, p_factors, n_pad, s_terms), lambda b, e: (e, 0, 0, 0)),
+            pl.BlockSpec((None, p_factors, n_pad, s_terms), lambda b, e: (e, 0, 0, 0)),
+            pl.BlockSpec((None, p_factors, n_pad, s_terms), lambda b, e: (e, 0, 0, 0)),
+            pl.BlockSpec((None, d_pad, block_b), lambda b, e: (e, 0, b)),
+        ],
+        out_specs=pl.BlockSpec((n_pad, block_b), lambda b, e: (0, b)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, b_pad), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((d_pad, block_b), jnp.float32)],
+        interpret=run_interpret,
+    )(idx, exp, sign, x.astype(jnp.float32))

@@ -16,6 +16,10 @@ Layout:
 
 Grid (n_blocks, k_blocks, b_blocks); K is the contraction axis — the output
 tile is revisited across k and accumulated in place.
+
+``interpret=None`` auto-detects: compiled on TPU, interpreter elsewhere (see
+``repro.kernels.dispatch``).  Whole FP chains should prefer the fused
+``lcc_chain_matmul`` — one launch for every factor of every slice.
 """
 from __future__ import annotations
 
@@ -24,6 +28,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .dispatch import resolve_interpret
 
 __all__ = ["lcc_factor_matmul"]
 
@@ -62,7 +68,7 @@ def lcc_factor_matmul(
     block_n: int = 128,
     block_k: int = 128,
     block_b: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """y[N, B] = F @ x where F is the compact LCC factor (idx, exp, sign)."""
     n, s_terms = idx.shape
@@ -84,5 +90,5 @@ def lcc_factor_matmul(
         ],
         out_specs=pl.BlockSpec((block_n, block_b), lambda i, j, p: (i, p)),
         out_shape=jax.ShapeDtypeStruct((n, b), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(idx, exp, sign, x)

@@ -1,9 +1,20 @@
 """jit'd public wrappers around the Pallas kernels.
 
 Bridges ``repro.core.lcc`` decomposition objects (numpy, offline) to the TPU
-runtime format: pads factors to block multiples, packs (idx, exp, sign)
-arrays, applies whole chains / decompositions, and evaluates weight-shared
-layers (paper eq. (10)) as segment-sum + centroid matmul.
+runtime format: pads factors to block multiples, packs (idx, exp, sign) into
+the stacked whole-chain layout of ``lcc_chain_matmul``, applies chains /
+decompositions fused (one launch per decomposition), and evaluates
+weight-shared layers (paper eq. (10)) as segment-sum + centroid matmul.
+
+Packed layout (see ``lcc_chain_matmul``'s module docstring for the kernel-side
+contract): all FP slices of a decomposition stack into [E, P, N_pad, S]
+streams; chains shorter than P are right-padded with identity factors, unused
+term slots and padded rows carry sign == 0.  FS programs have no factor-chain
+form — they fall back to their dense equivalent (an offline/storage format;
+DESIGN.md Sec. 2) and are combined outside the fused launch.
+
+Every ``interpret`` parameter defaults to ``None`` = auto-detect: compiled
+Pallas on TPU, interpreter on CPU/GPU (``repro.kernels.dispatch``).
 """
 from __future__ import annotations
 
@@ -15,16 +26,18 @@ import numpy as np
 from repro.core.lcc import LCCChain, LCCDecomposition
 
 from .group_prox import group_prox
+from .lcc_chain_matmul import lcc_chain_matmul
 from .lcc_matmul import lcc_factor_matmul
 from .shared_matmul import cluster_segment_sum
 
 __all__ = [
-    "PackedFactor",
     "PackedChain",
+    "PackedDecomposition",
     "pack_chain",
     "pack_decomposition",
     "apply_packed_chain",
     "apply_packed_decomposition",
+    "segment_sum_tpu",
     "shared_matmul_tpu",
     "group_prox",
 ]
@@ -34,13 +47,24 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def _pad_dim(n: int, block: int) -> int:
+    """Seed padding convention: multiples of min(block, n) — small dims stay
+    small (interpret mode), dims >= block become block multiples (TPU tiling)."""
+    return _round_up(n, min(block, max(n, 1)))
+
+
 @dataclass(frozen=True)
-class PackedFactor:
-    idx: jnp.ndarray  # [N_pad, S] int32
-    exp: jnp.ndarray  # [N_pad, S] int8
-    sign: jnp.ndarray  # [N_pad, S] int8
+class PackedChain:
+    """One FP chain in the stacked kernel layout: factor axis leading."""
+
+    idx: jnp.ndarray  # [P, N_pad, S] int32
+    exp: jnp.ndarray  # [P, N_pad, S] int8
+    sign: jnp.ndarray  # [P, N_pad, S] int8
     in_dim: int  # unpadded
     out_dim: int  # unpadded
+    d_pad: int  # width of the running vector the kernel carries
+    first_width: int  # padded input width addressable by the first factor
+    n_factors: int  # real (un-padded) chain length
 
     @property
     def compact_bytes(self) -> int:
@@ -49,89 +73,191 @@ class PackedFactor:
 
 
 @dataclass(frozen=True)
-class PackedChain:
-    factors: tuple[PackedFactor, ...]
+class PackedDecomposition:
+    """Whole decomposition: FP slices stacked for one fused launch + dense rest."""
+
+    idx: jnp.ndarray  # [E, P, N_pad, S] int32
+    exp: jnp.ndarray  # [E, P, N_pad, S] int8
+    sign: jnp.ndarray  # [E, P, N_pad, S] int8
+    col_slices: tuple[tuple[int, int], ...]  # E entries (FP slices only)
+    dense: tuple[tuple[tuple[int, int], jnp.ndarray], ...]  # non-FP fallback
     in_dim: int
     out_dim: int
+    d_pad: int
+    first_width: int  # padded max slice width (first-factor column span)
+    chain_lengths: tuple[int, ...]  # real factor count per FP slice
+
+
+def _stack_chain(chain: LCCChain, n_pad: int, s_max: int, p_max: int
+                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Stack one chain's factors into [P, N_pad, S]; identity-pad to p_max."""
+    idx = np.zeros((p_max, n_pad, s_max), np.int32)
+    exp = np.zeros((p_max, n_pad, s_max), np.int8)
+    sgn = np.zeros((p_max, n_pad, s_max), np.int8)
+    for p, f in enumerate(chain.factors):
+        idx[p, : f.out_dim, : f.s_terms] = f.idx
+        exp[p, : f.out_dim, : f.s_terms] = f.exp
+        sgn[p, : f.out_dim, : f.s_terms] = f.sign
+    for p in range(len(chain.factors), p_max):  # identity wiring: y = prev
+        idx[p, :, 0] = np.arange(n_pad)
+        sgn[p, :, 0] = 1
+    return idx, exp, sgn
 
 
 def pack_chain(chain: LCCChain, block: int = 128) -> PackedChain:
-    """Pad every factor of an FP chain to block multiples for the kernel."""
-    packed = []
-    prev_dim = chain.in_dim
-    for f in chain.factors:
-        n_pad = _round_up(f.out_dim, min(block, max(f.out_dim, 1)))
-        idx = np.zeros((n_pad, f.s_terms), np.int32)
-        exp = np.zeros((n_pad, f.s_terms), np.int8)
-        sgn = np.zeros((n_pad, f.s_terms), np.int8)
-        idx[: f.out_dim] = f.idx
-        exp[: f.out_dim] = f.exp
-        sgn[: f.out_dim] = f.sign
-        packed.append(
-            PackedFactor(jnp.asarray(idx), jnp.asarray(exp), jnp.asarray(sgn),
-                         in_dim=prev_dim, out_dim=f.out_dim)
-        )
-        prev_dim = f.out_dim
-    return PackedChain(tuple(packed), in_dim=chain.in_dim, out_dim=prev_dim)
+    """Pack one FP chain into the stacked fused-kernel layout."""
+    out_dim = chain.factors[-1].out_dim if chain.factors else chain.in_dim
+    n_pad = _pad_dim(max([f.out_dim for f in chain.factors] or [chain.in_dim]),
+                     block)
+    s_max = max([f.s_terms for f in chain.factors] or [1])
+    p_max = max(len(chain.factors), 1)
+    k_pad = _pad_dim(chain.in_dim, block)
+    d_pad = max(n_pad, k_pad)
+    # an empty chain packs as one identity factor whose rows span n_pad
+    first_width = k_pad if chain.factors else n_pad
+    idx, exp, sgn = _stack_chain(chain, n_pad, s_max, p_max)
+    return PackedChain(jnp.asarray(idx), jnp.asarray(exp), jnp.asarray(sgn),
+                       in_dim=chain.in_dim, out_dim=out_dim, d_pad=d_pad,
+                       first_width=first_width,
+                       n_factors=max(len(chain.factors), 1))
+
+
+def pack_decomposition(dec: LCCDecomposition, block: int = 128
+                       ) -> PackedDecomposition:
+    """Pack every FP slice chain into ONE stacked multi-slice layout."""
+    fp = [((c0, c1), s) for (c0, c1), s in zip(dec.col_slices, dec.slices)
+          if isinstance(s, LCCChain)]
+    dense = tuple(((c0, c1), jnp.asarray(s.to_dense(), jnp.float32))
+                  for (c0, c1), s in zip(dec.col_slices, dec.slices)
+                  if not isinstance(s, LCCChain))
+    n, k = dec.shape
+    if not fp:
+        return PackedDecomposition(
+            jnp.zeros((0, 1, 1, 1), jnp.int32), jnp.zeros((0, 1, 1, 1), jnp.int8),
+            jnp.zeros((0, 1, 1, 1), jnp.int8), (), dense,
+            in_dim=k, out_dim=n, d_pad=1, first_width=1, chain_lengths=())
+    all_factors = [f for _, ch in fp for f in ch.factors]
+    n_pad = _pad_dim(max([f.out_dim for f in all_factors] or [n]), block)
+    s_max = max([f.s_terms for f in all_factors] or [1])
+    p_max = max(max(len(ch.factors) for _, ch in fp), 1)
+    w_pad = _pad_dim(max(c1 - c0 for (c0, c1), _ in fp), block)
+    d_pad = max(n_pad, w_pad)
+    stacked = [_stack_chain(ch, n_pad, s_max, p_max) for _, ch in fp]
+    return PackedDecomposition(
+        idx=jnp.asarray(np.stack([s[0] for s in stacked])),
+        exp=jnp.asarray(np.stack([s[1] for s in stacked])),
+        sign=jnp.asarray(np.stack([s[2] for s in stacked])),
+        col_slices=tuple(cs for cs, _ in fp),
+        dense=dense, in_dim=k, out_dim=n, d_pad=d_pad, first_width=w_pad,
+        chain_lengths=tuple(max(len(ch.factors), 1) for _, ch in fp))
+
+
+def _pad_batch(b: int, block: int) -> tuple[int, int]:
+    bb = min(block, b)
+    return bb, _round_up(b, bb)
+
+
+def _apply_stacked_per_factor(idx, exp, sign, x_pad, chain_lengths, *,
+                              block: int, interpret: bool | None):
+    """Per-factor launch loop over the stacked layout — the pre-fusion runtime,
+    kept as the fused kernel's wall-clock baseline (benchmarks) and as an
+    independent second implementation for equivalence tests.  Launches only
+    each chain's REAL factors (identity padding exists for the fused stack's
+    benefit; a pre-fusion runtime never ran it)."""
+    e_slices, _, n_pad, _ = idx.shape
+    _, d_pad, b_pad = x_pad.shape
+    y = jnp.zeros((n_pad, b_pad), jnp.float32)
+    bb = min(block, b_pad)
+    for e in range(e_slices):
+        cur = x_pad[e]
+        for p in range(chain_lengths[e]):
+            out = lcc_factor_matmul(idx[e, p], exp[e, p], sign[e, p], cur,
+                                    block_n=min(block, n_pad),
+                                    block_k=min(block, d_pad),
+                                    block_b=bb, interpret=interpret)
+            cur = jnp.pad(out, ((0, d_pad - n_pad), (0, 0)))
+        y = y + cur[:n_pad]
+    return y
 
 
 def apply_packed_chain(pc: PackedChain, x: jnp.ndarray, *, block: int = 128,
-                       interpret: bool = True) -> jnp.ndarray:
-    """y[N, B] = (F_P ... F_1) @ x[K, B] running every factor on the kernel.
+                       interpret: bool | None = None,
+                       fused: bool = True) -> jnp.ndarray:
+    """y[N, B] = (F_P ... F_1) @ x[K, B] — the whole chain in one fused launch.
 
     Padded rows carry sign==0 slots (value 0) so they stay exactly zero through
     the chain; the final slice recovers the true output dim.
     """
     k, b = x.shape
-    assert k == pc.in_dim, (k, pc.in_dim)
-    bb = min(block, b)
-    b_pad = _round_up(b, bb)
-    if b_pad != b:
-        x = jnp.pad(x, ((0, 0), (0, b_pad - b)))
-    for pf in pc.factors:
-        bk = min(block, pf.idx.shape[0] if x.shape[0] == 0 else x.shape[0])
-        k_pad = _round_up(x.shape[0], bk)
-        if k_pad != x.shape[0]:
-            x = jnp.pad(x, ((0, k_pad - x.shape[0]), (0, 0)))
-        bn = min(block, pf.idx.shape[0])
-        x = lcc_factor_matmul(pf.idx, pf.exp, pf.sign, x,
-                              block_n=bn, block_k=min(bk, x.shape[0]),
-                              block_b=bb, interpret=interpret)
-    return x[: pc.out_dim, :b]
+    if k != pc.in_dim:
+        raise ValueError(f"x has {k} rows, chain expects in_dim={pc.in_dim}")
+    bb, b_pad = _pad_batch(b, block)
+    x_pad = jnp.pad(x.astype(jnp.float32),
+                    ((0, pc.d_pad - k), (0, b_pad - b)))[None]
+    if fused:
+        y = lcc_chain_matmul(pc.idx[None], pc.exp[None], pc.sign[None], x_pad,
+                             block_b=bb, first_width=pc.first_width,
+                             interpret=interpret)
+    else:
+        y = _apply_stacked_per_factor(pc.idx[None], pc.exp[None], pc.sign[None],
+                                      x_pad, (pc.n_factors,), block=block,
+                                      interpret=interpret)
+    return y[: pc.out_dim, :b]
 
 
-def pack_decomposition(dec: LCCDecomposition, block: int = 128):
-    """Pack every FP slice chain. (FS programs run via their dense equivalent —
-    the FS DAG is an offline/storage format; see DESIGN.md Sec. 2.)"""
-    out = []
-    for (c0, c1), s in zip(dec.col_slices, dec.slices):
-        if isinstance(s, LCCChain):
-            out.append(((c0, c1), pack_chain(s, block)))
-        else:
-            out.append(((c0, c1), jnp.asarray(s.to_dense(), jnp.float32)))
-    return out
+def apply_packed_decomposition(packed: PackedDecomposition, x: jnp.ndarray, *,
+                               block: int = 128, interpret: bool | None = None,
+                               fused: bool = True) -> jnp.ndarray:
+    """y = W_hat @ x for a packed decomposition; x [K, B] (or [K] vector).
 
-
-def apply_packed_decomposition(packed, x: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
-    """y = W_hat @ x for a packed decomposition; x [K, B]."""
-    y = None
-    for (c0, c1), item in packed:
-        xs = x[c0:c1]
-        if isinstance(item, PackedChain):
-            part = apply_packed_chain(item, xs, interpret=interpret)
-        else:
-            part = item @ xs.astype(jnp.float32)
-        y = part if y is None else y + part
-    return y
-
-
-def shared_matmul_tpu(centroids: jnp.ndarray, labels: jnp.ndarray, x: jnp.ndarray,
-                      *, interpret: bool = True) -> jnp.ndarray:
-    """Eq. (10) on TPU: kernel segment-sum then centroid matmul. x [K, B] -> [N, B]."""
-    n, c = centroids.shape
+    All FP slices run in a single ``lcc_chain_matmul`` launch (``fused=True``,
+    the default); ``fused=False`` runs the legacy one-``pallas_call``-per-factor
+    loop for comparison.  Dense-fallback slices (FS programs) are added on top.
+    """
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[:, None]
     k, b = x.shape
-    bc = min(128, c)
-    c_pad = _round_up(c, bc)
+    if k != packed.in_dim:
+        raise ValueError(f"x has {k} rows, decomposition expects "
+                         f"in_dim={packed.in_dim}")
+    y = None
+    e_slices = len(packed.col_slices)
+    if e_slices:
+        bb, b_pad = _pad_batch(b, block)
+        x_pad = jnp.stack([
+            jnp.pad(x[c0:c1].astype(jnp.float32),
+                    ((0, packed.d_pad - (c1 - c0)), (0, b_pad - b)))
+            for c0, c1 in packed.col_slices])
+        if fused:
+            y = lcc_chain_matmul(packed.idx, packed.exp, packed.sign, x_pad,
+                                 block_b=bb, first_width=packed.first_width,
+                                 interpret=interpret)
+        else:
+            y = _apply_stacked_per_factor(packed.idx, packed.exp, packed.sign,
+                                          x_pad, packed.chain_lengths,
+                                          block=block, interpret=interpret)
+        y = y[: packed.out_dim, :b]
+    for (c0, c1), w in packed.dense:
+        part = w @ x[c0:c1].astype(jnp.float32)
+        y = part if y is None else y + part
+    if y is None:
+        raise ValueError("empty decomposition: no FP or dense slices to apply")
+    return y[:, 0] if squeeze else y
+
+
+def segment_sum_tpu(labels: jnp.ndarray, x: jnp.ndarray, num_clusters: int,
+                    *, interpret: bool | None = None) -> jnp.ndarray:
+    """Kernel segment-sum with ragged (K, C, B) padded to block multiples.
+
+    Padded K rows are labeled c_pad - 1; when num_clusters is already a block
+    multiple that id aliases the last *real* cluster, which stays correct only
+    because the padded x rows are zero — keep that invariant when changing the
+    padding.
+    """
+    k, b = x.shape
+    bc = min(128, num_clusters)
+    c_pad = _round_up(num_clusters, bc)
     bk = min(128, k)
     k_pad = _round_up(k, bk)
     bb = min(128, b)
@@ -141,7 +267,13 @@ def shared_matmul_tpu(centroids: jnp.ndarray, labels: jnp.ndarray, x: jnp.ndarra
     xp = jnp.pad(x, ((0, k_pad - k), (0, b_pad - b))) if (k_pad != k or b_pad != b) else x
     agg = cluster_segment_sum(lab, xp, num_clusters=c_pad,
                               block_c=bc, block_k=bk, block_b=bb, interpret=interpret)
-    agg = agg[:c, :b]
+    return agg[:num_clusters, :b]
+
+
+def shared_matmul_tpu(centroids: jnp.ndarray, labels: jnp.ndarray, x: jnp.ndarray,
+                      *, interpret: bool | None = None) -> jnp.ndarray:
+    """Eq. (10) on TPU: kernel segment-sum then centroid matmul. x [K, B] -> [N, B]."""
+    agg = segment_sum_tpu(labels, x, centroids.shape[1], interpret=interpret)
     return centroids.astype(jnp.float32) @ agg
 
 

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .dispatch import resolve_interpret
+
 __all__ = ["cluster_segment_sum"]
 
 
@@ -44,7 +46,7 @@ def cluster_segment_sum(
     block_c: int = 128,
     block_k: int = 128,
     block_b: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """agg[C, B] = segment_sum(x[K, B], labels[K])."""
     k, b = x.shape
@@ -64,5 +66,5 @@ def cluster_segment_sum(
         ],
         out_specs=pl.BlockSpec((block_c, block_b), lambda i, j, p: (i, p)),
         out_shape=jax.ShapeDtypeStruct((c, b), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(labels, x)

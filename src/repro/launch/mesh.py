@@ -5,7 +5,7 @@ jax device state (the dry-run sets XLA_FLAGS before any jax initialization).
 """
 from __future__ import annotations
 
-import jax
+from repro import compat
 
 __all__ = ["make_production_mesh", "HW"]
 
@@ -14,8 +14,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (256 chips) or 2x16x16 (512 chips, 2 pods)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 class HW:

@@ -6,36 +6,22 @@
 import argparse
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 import repro.core as core
 from repro.configs import get_arch, reduced_config
 from repro.data.synthetic import MarkovLM
 from repro.models import api
-from repro.serving.engine import ServingEngine
+from repro.serving.engine import ServingEngine, compress_ffn_for_serving
 
 
 def compress_ffn(params, cfg, max_share_rel_err=0.06):
     """Algorithm-1 steps 2-3 on every FFN projection; returns (params', report)."""
-    report = core.ModelCostReport()
-    ffn = dict(params["blocks"]["ffn"])
-    for proj in ("gate", "up", "down"):
-        stack = np.asarray(params["blocks"]["ffn"][proj]["w"], np.float64)
-        out = []
-        for li in range(stack.shape[0]):
-            w = stack[li].T
-            cd = core.compress_dense_matrix(
-                f"ffn.{proj}.l{li}", w,
-                core.CompressionConfig(algorithm="fs",
-                                       max_share_rel_err=max_share_rel_err), report)
-            eff = np.zeros_like(w)
-            eff[:, cd.kept_columns] = cd.effective
-            out.append(eff.T.astype(np.float32))
-        ffn[proj] = {"w": jnp.asarray(np.stack(out))}
-    p2 = dict(params)
-    p2["blocks"] = {**params["blocks"], "ffn": ffn}
-    return p2, report
+    params_c, _matvecs, report = compress_ffn_for_serving(
+        params, cfg,
+        core.CompressionConfig(algorithm="fs",
+                               max_share_rel_err=max_share_rel_err),
+        build_matvecs=False)  # the demo serves through the XLA dense path
+    return params_c, report
 
 
 def main() -> None:

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import get_arch, reduced_config
 from repro.data.synthetic import MarkovLM
@@ -42,7 +43,7 @@ def build_mesh(spec: str | None):
         return None
     dims = tuple(int(x) for x in spec.split("x"))
     axes = {1: ("data",), 2: ("data", "model"), 3: ("pod", "data", "model")}[len(dims)]
-    return jax.make_mesh(dims, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+    return compat.make_mesh(dims, axes)
 
 
 def main() -> None:
@@ -110,7 +111,7 @@ def main() -> None:
     ctx = mesh_context(mesh)
     with ctx:
         if mesh is not None:
-            jax.sharding.set_mesh(mesh)
+            compat.set_global_mesh(mesh)
         t0 = time.time()
         i = start_step
         while i < args.steps:
@@ -145,7 +146,7 @@ def main() -> None:
                 mesh = new_mesh
                 args.grad_compression = False  # single pod left
                 step_fn = make_step(None)
-                jax.sharding.set_mesh(mesh)
+                compat.set_global_mesh(mesh)
                 from repro.distributed import act_shard
                 act_shard.set_mesh(mesh)  # activation constraints follow the new mesh
                 i += 1

@@ -6,7 +6,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["init_mlp", "mlp_forward", "mlp_loss", "mlp_accuracy"]
+__all__ = ["init_mlp", "mlp_forward", "mlp_forward_custom",
+           "mlp_forward_compressed", "mlp_loss", "mlp_accuracy"]
 
 
 def init_mlp(key, in_dim: int = 784, hidden: int = 300, classes: int = 10,
@@ -29,10 +30,29 @@ def mlp_forward(params, x):
 
 
 def mlp_forward_custom(params, x, fc1_matvec=None):
-    """Forward with a replaceable first-layer matvec (compressed inference)."""
+    """Forward with a replaceable first-layer matvec (compressed inference).
+
+    ``fc1_matvec`` maps x [B, in_dim] -> [B, hidden] (batch-major, like the
+    dense path it replaces).
+    """
     if fc1_matvec is None:
         return mlp_forward(params, x)
     h = jax.nn.relu(fc1_matvec(x) + params["fc1"]["b"])
+    return h @ params["fc2"]["w"].T + params["fc2"]["b"]
+
+
+def mlp_forward_compressed(params, packed_fc1, x, *, interpret=None):
+    """Compressed-dense forward: fc1 runs as ONE fused whole-chain LCC launch.
+
+    ``packed_fc1`` is ``repro.kernels.ops.pack_decomposition`` of an LCC
+    decomposition of fc1's weight (paper Sec. IV-A: the 784->300 layer).  The
+    kernel contract is features-major, so the batch is transposed around the
+    fused call; fc2 stays dense (it is not the compression target).
+    """
+    from repro.kernels import ops
+
+    h = ops.apply_packed_decomposition(packed_fc1, x.T, interpret=interpret).T
+    h = jax.nn.relu(h + params["fc1"]["b"])
     return h @ params["fc2"]["w"].T + params["fc2"]["b"]
 
 

@@ -13,6 +13,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.distributed.act_shard import constrain, get_mesh
 
 from .layers import dense_init, swiglu
@@ -210,7 +211,7 @@ def moe_ffn_manual(p, x, *, n_experts: int, top_k: int,
             return body(xt, router, gate, up, down, None, None, None)
         body_fn = body_noshared
     body_fn = body if has_shared else body_noshared
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         body_fn, mesh=mesh,
         in_specs=(tok_spec, P(), gate_spec, gate_spec, down_spec) + extra_specs,
         out_specs=tok_spec,

@@ -3,8 +3,15 @@
 The engine keeps a fixed decode batch of ``n_slots``; finished sequences free
 their slot and queued requests are prefilled into it (KV written at their
 positions).  Greedy or temperature sampling.  Works for every decode-capable
-family through models.api; the compressed-serving example swaps projection
-matvecs for LCC kernels at the model level.
+family through models.api.
+
+Compressed serving is first-class: :func:`compress_ffn_for_serving` runs the
+paper's Algorithm 1 over every FFN projection and returns (a) dense-effective
+weights for the stock XLA forward and (b) :class:`LCCMatvec` closures per
+projection — prune + (optional) weight-sharing segment-sum + the LCC runtime.
+FP decompositions run their whole factor chain as ONE fused Pallas launch
+(``repro.kernels.lcc_chain_matmul``, the shift-add runtime the paper
+targets); FS decompositions evaluate through their dense equivalent.
 """
 from __future__ import annotations
 
@@ -17,7 +24,8 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import api, transformer
 
-__all__ = ["ServingEngine", "GenerationResult"]
+__all__ = ["ServingEngine", "GenerationResult", "LCCMatvec",
+           "compress_ffn_for_serving"]
 
 
 @dataclass
@@ -35,6 +43,9 @@ class ServingEngine:
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_len = max_len
+        # per-request decode budget; generate() overrides it per call, but a
+        # standalone submit()/step() loop must find it initialized
+        self.max_new = max_len
         self.eos = eos_id
         self.temp = temperature
         self.key = jax.random.PRNGKey(seed)
@@ -49,6 +60,11 @@ class ServingEngine:
     # ------------------------------------------------------------------ API
     def submit(self, prompt: list[int]) -> int:
         """Prefill a prompt into a free slot; returns request id."""
+        if not prompt:
+            raise ValueError("empty prompt: decode needs at least one token")
+        if len(prompt) > self.max_len:
+            raise ValueError(f"prompt of {len(prompt)} tokens exceeds the "
+                             f"engine's max_len={self.max_len} KV cache")
         free = np.where(~self.active)[0]
         if free.size == 0:
             raise RuntimeError("no free slots; call step() until one finishes")
@@ -58,7 +74,7 @@ class ServingEngine:
         # prefill token-by-token through decode (single-request path keeps the
         # cache layout identical; bulk prefill via forward() feeds training)
         for t, tok in enumerate(prompt):
-            logits, self.state = self._decode(
+            _logits, self.state = self._decode(
                 self.params, self.state,
                 self._token_batch(slot, tok), self._pos_batch(slot, t))
         self.pos[slot] = len(prompt)
@@ -66,7 +82,6 @@ class ServingEngine:
         self.slot_req[slot] = rid
         self.results[rid] = GenerationResult(tokens=list(prompt),
                                              prompt_len=len(prompt), finished=False)
-        self._last_logits = logits
         return rid
 
     def step(self) -> None:
@@ -97,14 +112,18 @@ class ServingEngine:
     def generate(self, prompts: list[list[int]], max_new_tokens: int = 32
                  ) -> list[GenerationResult]:
         """Continuous-batched generation over a request list."""
-        self.max_new = max_new_tokens
+        prev_max_new = self.max_new  # restored below: the per-call budget must
+        self.max_new = max_new_tokens  # not leak into later standalone loops
         queue = list(enumerate(prompts))
         rid_map = {}
-        while queue or self.active.any():
-            while queue and (~self.active).any():
-                i, prompt = queue.pop(0)
-                rid_map[self.submit(prompt)] = i
-            self.step()
+        try:
+            while queue or self.active.any():
+                while queue and (~self.active).any():
+                    i, prompt = queue.pop(0)
+                    rid_map[self.submit(prompt)] = i
+                self.step()
+        finally:
+            self.max_new = prev_max_new
         out: list[GenerationResult | None] = [None] * len(prompts)
         for rid, i in rid_map.items():
             out[i] = self.results[rid]
@@ -126,3 +145,90 @@ class ServingEngine:
             return int(np.argmax(logits))
         self.key, k = jax.random.split(self.key)
         return int(jax.random.categorical(k, jnp.asarray(logits) / self.temp))
+
+
+# ---------------------------------------------------------------- compression
+
+
+class LCCMatvec:
+    """One compressed projection as a fused-kernel matvec: x [K, B] -> [N, B].
+
+    Prune (kept_columns gather) -> optional weight-sharing segment-sum (paper
+    eq. (10)) -> the whole FP decomposition in a single ``lcc_chain_matmul``
+    launch.  Built from a ``core.compress.CompressedDense`` record.
+    """
+
+    def __init__(self, cd, *, block: int = 128, interpret: bool | None = None):
+        from repro.kernels import ops
+
+        self.name = cd.name
+        self.packed = ops.pack_decomposition(cd.decomposition, block)
+        self.kept = jnp.asarray(np.asarray(cd.kept_columns), jnp.int32)
+        self.labels = (jnp.asarray(cd.shared.labels, jnp.int32)
+                       if cd.shared is not None else None)
+        self.n_clusters = cd.shared.n_clusters if cd.shared is not None else 0
+        self.interpret = interpret
+        # jit the whole chain (gather -> segment-sum -> fused kernel) so a
+        # per-token decode loop pays one dispatch, not one per slice/stage
+        self._fn = jax.jit(self._run)
+
+    def _run(self, x: jnp.ndarray) -> jnp.ndarray:
+        from repro.kernels import ops
+
+        xk = x[self.kept]
+        if self.labels is not None:
+            xk = ops.segment_sum_tpu(self.labels, xk, self.n_clusters,
+                                     interpret=self.interpret)
+        return ops.apply_packed_decomposition(self.packed, xk,
+                                              interpret=self.interpret)
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        if x.ndim == 1:
+            return self._fn(x[:, None])[:, 0]
+        return self._fn(x)
+
+
+def compress_ffn_for_serving(params, cfg: ArchConfig, compression=None, *,
+                             report=None, interpret: bool | None = None,
+                             build_matvecs: bool = True):
+    """Algorithm 1 over every FFN projection of a dense transformer.
+
+    Returns ``(params_c, matvecs, report)``: ``params_c`` are the original
+    params with FFN weights replaced by their compressed dense equivalent
+    (drop-in for the stock XLA forward, used by :class:`ServingEngine`);
+    ``matvecs[proj][layer]`` is the :class:`LCCMatvec` running the same map on
+    the fused shift-add kernel path.  ``build_matvecs=False`` skips the
+    packing + device upload when the caller only wants the dense-effective
+    params (``matvecs`` comes back empty).
+    """
+    from repro import core
+
+    if cfg.moe is not None or cfg.family in ("ssm", "hybrid") or cfg.enc_layers:
+        raise ValueError(
+            f"FFN compression targets dense-FFN architectures, not {cfg.family!r} "
+            "(MoE/SSM/hybrid/encoder-decoder FFNs need per-family adapters)")
+    if compression is None:
+        compression = core.CompressionConfig(algorithm="fs", weight_sharing=True,
+                                             max_share_rel_err=0.06)
+    if report is None:
+        report = core.ModelCostReport()
+    ffn = params["blocks"]["ffn"]
+    new_ffn = dict(ffn)
+    matvecs: dict[str, list[LCCMatvec]] = {}
+    for proj in ("gate", "up", "down"):
+        stack = np.asarray(ffn[proj]["w"], np.float64)
+        eff_stack, mvs = [], []
+        for li in range(stack.shape[0]):
+            w = stack[li].T  # act as y = W x (paper layout)
+            cd = core.compress_dense_matrix(f"ffn.{proj}.l{li}", w,
+                                            compression, report)
+            eff = np.zeros_like(w)
+            eff[:, cd.kept_columns] = cd.effective
+            eff_stack.append(eff.T.astype(np.float32))
+            if build_matvecs:
+                mvs.append(LCCMatvec(cd, interpret=interpret))
+        new_ffn[proj] = {"w": jnp.asarray(np.stack(eff_stack))}
+        matvecs[proj] = mvs
+    params_c = dict(params)
+    params_c["blocks"] = {**params["blocks"], "ffn": new_ffn}
+    return params_c, matvecs, report

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ArchConfig
 from repro.distributed.compress_grads import compressed_psum
 from repro.models import api
@@ -126,10 +127,10 @@ def make_train_step(cfg: ArchConfig, optimizer: Optimizer, *,
             gh, eh = compressed_psum(g0, e0, "pod")
             return gh, jax.tree.map(lambda a: a[None], eh)
 
-        fn = jax.shard_map(reduce_pods, mesh=mesh,
-                           in_specs=(P("pod"), P("pod")),
-                           out_specs=(P(), P("pod")),
-                           check_vma=False, axis_names=frozenset({"pod"}))
+        fn = compat.shard_map(reduce_pods, mesh=mesh,
+                              in_specs=(P("pod"), P("pod")),
+                              out_specs=(P(), P("pod")),
+                              check_vma=False, axis_names=frozenset({"pod"}))
         grads, new_efb = fn(grads, state.error_fb)
         state = TrainState(params=state.params, opt_state=state.opt_state,
                            step=state.step, error_fb=new_efb)

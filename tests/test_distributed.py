@@ -80,9 +80,9 @@ def test_compressed_psum_error_feedback_subprocess():
     out = _run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import Mesh, PartitionSpec as P
+        from repro import compat
         from repro.distributed.compress_grads import compressed_psum
-        mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((2, 4), ("pod", "data"))
         rng = np.random.default_rng(0)
         g = jnp.asarray(rng.standard_normal((2, 64, 32)), jnp.float32)  # per-pod grads
         e = jnp.zeros_like(g)
@@ -90,8 +90,8 @@ def test_compressed_psum_error_feedback_subprocess():
         def f(g, e):
             return compressed_psum({"w": g}, {"w": e}, "pod")
 
-        fn = jax.shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
-                           out_specs=(P("pod"), P("pod")), check_vma=False)
+        fn = compat.shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
+                              out_specs=(P("pod"), P("pod")), check_vma=False)
         (gh, eh) = fn(g, e)
         true_mean = np.asarray(g).mean(0)
         got = np.asarray(gh["w"][0])
@@ -120,8 +120,8 @@ def test_pjit_train_step_multidevice_subprocess():
         from repro.distributed.act_shard import mesh_context
         from repro.optim.optimizers import adamw
         from repro.training.trainer import init_train_state, make_train_step
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro import compat
+        mesh = compat.make_mesh((2, 4), ("data", "model"))
         cfg = reduced_config(get_arch("olmo-1b"), d_model=64, d_ff=128, vocab=256,
                              n_heads=4, n_kv_heads=4, head_dim=16)
         opt = adamw()
@@ -148,8 +148,8 @@ def test_gpipe_pipeline_subprocess():
     out = _run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.distributed.pipeline import gpipe_forward, split_stages
-        mesh = jax.make_mesh((4,), ("pipe",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro import compat
+        mesh = compat.make_mesh((4,), ("pipe",))
         rng = np.random.default_rng(0)
         L, D = 8, 16
         w = jnp.asarray(rng.standard_normal((L, D, D)) * 0.3, jnp.float32)
@@ -175,8 +175,8 @@ def test_overlapped_ag_matmul_subprocess():
     out = _run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.distributed.overlap import overlapped_ag_matmul
-        mesh = jax.make_mesh((4,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro import compat
+        mesh = compat.make_mesh((4,), ("model",))
         rng = np.random.default_rng(0)
         x = jnp.asarray(rng.standard_normal((6, 32)), jnp.float32)
         w = jnp.asarray(rng.standard_normal((32, 24)), jnp.float32)

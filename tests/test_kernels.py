@@ -50,6 +50,159 @@ def test_chain_apply_matches_decomposition():
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("shape,b", [((96, 24), 7), ((50, 13), 5), ((128, 24), 128),
+                                     ((512, 16), 33), ((37, 5), 1)])
+def test_fused_decomposition_matches_numpy_apply(shape, b):
+    """Fused whole-chain kernel == LCCDecomposition.apply (numpy reference)
+    over odd/padded shapes and multi-slice decompositions (acceptance: 1e-5)."""
+    rng = np.random.default_rng(shape[0] + b)
+    w = rng.standard_normal(shape)
+    dec = lcc_decompose(w, algorithm="fp", target_snr_db=35.0)
+    assert len(dec.col_slices) >= 2 or shape[1] <= 16  # exercise multi-slice
+    packed = ops.pack_decomposition(dec)
+    x = jnp.asarray(rng.standard_normal((shape[1], b)), jnp.float32)
+    want = dec.apply(np.asarray(x, np.float64))
+    got = np.asarray(ops.apply_packed_decomposition(packed, x))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_fused_equals_per_factor_loop():
+    """The single-launch kernel and the per-factor pallas_call loop are two
+    implementations of the same chain — bitwise-comparable f32 results."""
+    rng = np.random.default_rng(21)
+    w = rng.standard_normal((160, 40))
+    dec = lcc_decompose(w, algorithm="fp", target_snr_db=35.0, slice_width=11)
+    packed = ops.pack_decomposition(dec)
+    x = jnp.asarray(rng.standard_normal((40, 19)), jnp.float32)
+    fused = np.asarray(ops.apply_packed_decomposition(packed, x))
+    loop = np.asarray(ops.apply_packed_decomposition(packed, x, fused=False))
+    np.testing.assert_allclose(fused, loop, rtol=1e-6, atol=1e-6)
+
+
+def test_fused_chain_padded_rows_stay_zero():
+    """sign==0 invariant: rows beyond every factor's true out_dim decompress
+    to zero and stay exactly zero through the whole chain."""
+    from repro.kernels.lcc_chain_matmul import lcc_chain_matmul
+
+    rng = np.random.default_rng(22)
+    w = rng.standard_normal((200, 16))  # out_dim 200 pads to n_pad 256
+    dec = lcc_decompose(w, algorithm="fp", target_snr_db=30.0, slice_width=16)
+    pc = ops.pack_chain(dec.slices[0], block=128)
+    n_pad = pc.idx.shape[1]
+    assert n_pad > pc.out_dim  # the invariant must have real rows to bite on
+    x = jnp.zeros((1, pc.d_pad, 8), jnp.float32).at[0, : pc.in_dim].set(
+        jnp.asarray(rng.standard_normal((pc.in_dim, 8)), jnp.float32))
+    y = np.asarray(lcc_chain_matmul(pc.idx[None], pc.exp[None], pc.sign[None], x,
+                                    block_b=8, first_width=pc.first_width))
+    assert y.shape[0] == n_pad
+    np.testing.assert_array_equal(y[pc.out_dim:], 0.0)
+    want = dec.slices[0].apply(np.asarray(x[0, : pc.in_dim], np.float64))
+    np.testing.assert_allclose(y[: pc.out_dim], want, rtol=1e-5, atol=1e-5)
+
+
+def test_fused_kernel_onehot_formulation_matches_gather():
+    """The compiled (one-hot/MXU) decompress branch == the gather branch,
+    both run under the interpreter via the use_gather override — keeps the
+    production-TPU formulation covered by CPU CI."""
+    from repro.kernels.lcc_chain_matmul import lcc_chain_matmul
+
+    rng = np.random.default_rng(28)
+    w = rng.standard_normal((200, 16))
+    dec = lcc_decompose(w, algorithm="fp", target_snr_db=35.0)
+    packed = ops.pack_decomposition(dec)
+    bb, b_pad = 8, 8
+    x_pad = jnp.stack([
+        jnp.pad(jnp.asarray(rng.standard_normal((c1 - c0, b_pad)), jnp.float32),
+                ((0, packed.d_pad - (c1 - c0)), (0, 0)))
+        for c0, c1 in packed.col_slices])
+    args = (packed.idx, packed.exp, packed.sign, x_pad)
+    kw = dict(block_b=bb, first_width=packed.first_width, interpret=True)
+    gather = np.asarray(lcc_chain_matmul(*args, use_gather=True, **kw))
+    onehot = np.asarray(lcc_chain_matmul(*args, use_gather=False, **kw))
+    np.testing.assert_allclose(onehot, gather, rtol=1e-6, atol=1e-6)
+
+
+def test_fused_kernel_interpret_override_matches():
+    """Explicit interpret=True equals the auto-detected default on this host."""
+    rng = np.random.default_rng(23)
+    w = rng.standard_normal((64, 12))
+    dec = lcc_decompose(w, algorithm="fp", target_snr_db=35.0)
+    packed = ops.pack_decomposition(dec)
+    x = jnp.asarray(rng.standard_normal((12, 6)), jnp.float32)
+    auto = np.asarray(ops.apply_packed_decomposition(packed, x))
+    forced = np.asarray(ops.apply_packed_decomposition(packed, x, interpret=True))
+    np.testing.assert_allclose(auto, forced, rtol=1e-6, atol=1e-6)
+
+
+def test_apply_packed_chain_matches_chain_apply():
+    """Single-chain API: fused and per-factor paths == LCCChain.apply."""
+    rng = np.random.default_rng(25)
+    w = rng.standard_normal((96, 12))
+    dec = lcc_decompose(w, algorithm="fp", target_snr_db=40.0, slice_width=12)
+    chain = dec.slices[0]
+    pc = ops.pack_chain(chain)
+    x = jnp.asarray(rng.standard_normal((12, 9)), jnp.float32)
+    want = chain.apply(np.asarray(x, np.float64))
+    for fused in (True, False):
+        got = np.asarray(ops.apply_packed_chain(pc, x, fused=fused))
+        assert got.shape == (96, 9)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_mlp_forward_compressed_matches_dense():
+    """models/ wiring: fc1 through the fused kernel tracks the dense forward
+    at the decomposition's SNR and preserves argmax decisions."""
+    import jax as _jax
+    from repro.models.mlp import init_mlp, mlp_forward, mlp_forward_compressed
+
+    rng = np.random.default_rng(26)
+    params = init_mlp(_jax.random.PRNGKey(0), in_dim=48, hidden=64, classes=10)
+    dec = lcc_decompose(np.asarray(params["fc1"]["w"], np.float64),
+                        algorithm="fp", target_snr_db=50.0)
+    packed = ops.pack_decomposition(dec)
+    x = jnp.asarray(rng.standard_normal((5, 48)), jnp.float32)
+    ref = mlp_forward(params, x)
+    got = mlp_forward_compressed(params, packed, x)
+    assert got.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=0.05, atol=0.05)
+    np.testing.assert_array_equal(np.argmax(np.asarray(got), -1),
+                                  np.argmax(np.asarray(ref), -1))
+
+
+def test_lcc_matvec_vector_input_with_sharing():
+    """serving LCCMatvec: 1-D input works with and without weight sharing."""
+    from repro import core
+    from repro.serving.engine import LCCMatvec
+
+    rng = np.random.default_rng(27)
+    w = rng.standard_normal((40, 24))
+    for share in (False, True):
+        cd = core.compress_dense_matrix(
+            f"t.share{share}", w,
+            core.CompressionConfig(algorithm="fp", weight_sharing=share), None)
+        mv = LCCMatvec(cd)
+        x = rng.standard_normal(24)
+        got = np.asarray(mv(jnp.asarray(x, jnp.float32)))
+        want = cd.apply(x)
+        assert got.shape == (40,)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_vector_input_and_fs_dense_fallback():
+    """1-D input squeeze + FS slices combine through the dense fallback."""
+    rng = np.random.default_rng(24)
+    w = rng.standard_normal((48, 10))
+    dec = lcc_decompose(w, algorithm="fs", target_snr_db=35.0)
+    packed = ops.pack_decomposition(dec)
+    assert packed.dense  # FS programs run via their dense equivalent
+    x = rng.standard_normal(10)
+    got = np.asarray(ops.apply_packed_decomposition(packed, jnp.asarray(x, jnp.float32)))
+    want = dec.apply(x)
+    assert got.shape == (48,)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
 @pytest.mark.parametrize("k,b,c", [(128, 128, 128), (256, 64, 128), (128, 32, 256)])
 def test_cluster_segment_sum(k, b, c):
     rng = np.random.default_rng(k + b + c)

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_arch, reduced_config
 from repro.data.synthetic import MarkovLM, batches, digits_like, textures_like
@@ -66,3 +67,52 @@ def test_serving_slot_reuse():
     eng = ServingEngine(params, cfg, n_slots=2, max_len=64)
     res = eng.generate([[1, 2], [3, 4], [5, 6], [7, 8]], max_new_tokens=3)
     assert len(res) == 4 and all(r.finished for r in res)
+
+
+def test_serving_standalone_submit_step():
+    """submit()/step() without generate(): max_new must be initialized and the
+    loop must finish at the engine's own budget (here: max_len)."""
+    cfg = reduced_config(get_arch("olmo-1b"))
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, n_slots=1, max_len=12)
+    rid = eng.submit([3, 1, 4])
+    steps = 0
+    while eng.active.any():
+        eng.step()
+        steps += 1
+        assert steps <= 16, "decode loop failed to terminate"
+    r = eng.results[rid]
+    assert r.finished and len(r.tokens) == 12  # ran to max_len
+
+    # matches generate() on a fresh engine
+    eng2 = ServingEngine(params, cfg, n_slots=1, max_len=12)
+    r2 = eng2.generate([[3, 1, 4]], max_new_tokens=9)[0]
+    assert r2.tokens == r.tokens
+
+    # generate()'s per-call budget must not leak into a later standalone loop
+    rid3 = eng2.submit([3, 1, 4])
+    while eng2.active.any():
+        eng2.step()
+    assert len(eng2.results[rid3].tokens) == 12  # max_len, not the stale 9
+
+
+def test_serving_rejects_empty_prompt():
+    cfg = reduced_config(get_arch("olmo-1b"))
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, n_slots=1, max_len=8)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit([])
+    assert not eng.active.any()  # no slot leaked
+
+
+def test_serving_rejects_prompt_beyond_kv_cache():
+    """Overlong prompts must fail loudly, not scatter-clamp into the cache."""
+    cfg = reduced_config(get_arch("olmo-1b"))
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, n_slots=1, max_len=4)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit([1, 2, 3, 4, 5, 6])
+    assert not eng.active.any()
+    rid = eng.submit([1, 2, 3, 4])  # exactly max_len still fits
+    eng.step()
+    assert eng.results[rid].finished
