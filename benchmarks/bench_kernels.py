@@ -86,7 +86,34 @@ def run(csv_rows: list[str]) -> None:
     xx = jnp.asarray(rng.standard_normal((256, 128)), jnp.float32)
     us_sm = _time(lambda: ops.shared_matmul_tpu(cents, labels, xx))
     csv_rows.append(f"shared_matmul_interp,{us_sm:.0f},K256->C64_flop_ratio=4.0x")
-    for r in csv_rows[-10:]:
+
+    # engine prefill: ONE bulk api.prefill forward vs the legacy per-token
+    # decode loop (the pre-PR-2 submit path), same 48-token prompt
+    from repro.configs import get_arch
+    from repro.configs.base import reduced_config
+    from repro.models import api
+    from repro.serving.engine import ServingEngine
+
+    cfg = reduced_config(get_arch("olmo-1b"))
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    prompt = list(rng.integers(0, cfg.vocab, 48))
+
+    def prefill_us(bulk: bool) -> float:
+        eng = ServingEngine(params, cfg, n_slots=2, max_len=64,
+                            bulk_prefill=bulk)
+        eng.submit(prompt)  # warm-up: compiles the prefill/decode fns
+        t0 = time.time()
+        eng.submit(prompt)
+        jax.block_until_ready(jax.tree.leaves(eng.state)[0])
+        return (time.time() - t0) * 1e6
+
+    us_tokenwise = prefill_us(False)
+    us_bulk = prefill_us(True)
+    csv_rows.append(f"engine_prefill_tokenwise_48tok,{us_tokenwise:.0f},"
+                    f"one_decode_launch_per_token")
+    csv_rows.append(f"engine_prefill_bulk_48tok,{us_bulk:.0f},"
+                    f"speedup={us_tokenwise / us_bulk:.1f}x_single_forward")
+    for r in csv_rows[-12:]:
         print(r, flush=True)
 
 

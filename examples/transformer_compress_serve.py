@@ -1,16 +1,24 @@
-"""End-to-end driver: train a small LM, compress its projections with the
-paper's pipeline (sharing + LCC), and SERVE batched requests — the paper's
-technique as a first-class feature of the serving stack.
+"""End-to-end driver for the unified compression API: train a small LM, run
+the paper's Algorithm 1 over every compressible unit (``api.compress_model``
+via the family adapter registry), save/load the resulting ``CompressedModel``
+artifact through the msgpack+crc32 checkpointer, and SERVE batched requests
+with the FFN projections executing on the fused LCC kernel path *inside* the
+jitted decode step (``ServingEngine(artifact=...)``).
+
+    train -> compress_model -> CompressedModel.save -> load -> serve
 
     PYTHONPATH=src python examples/transformer_compress_serve.py [--steps 60]
 """
 import argparse
+import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, reduced_config
+from repro.core import CompressionConfig
+from repro.core.artifact import CompressedModel
 from repro.data.synthetic import MarkovLM
 from repro.models import api
 from repro.optim.optimizers import sgd
@@ -39,31 +47,29 @@ def main() -> None:
             print(f"   step {i:3d}  loss {float(m['loss']):.3f}")
     params = state.params
 
-    print("== 2. Algorithm 1 on every FFN projection (serving stack API) ==")
-    import repro.core as core
-    from repro.serving.engine import LCCMatvec, compress_ffn_for_serving
-    params_c, _matvecs, report = compress_ffn_for_serving(
-        params, cfg, build_matvecs=False)  # FS slices serve via dense fallback
-    print(report.table())
-    # the fused whole-chain kernel needs FP chains: compress one projection
-    # with algorithm='fp' and check its kernel path against the dense map
-    w0 = np.asarray(params["blocks"]["ffn"]["gate"]["w"], np.float64)[0].T
-    cd_fp = core.compress_dense_matrix(
-        "ffn.gate.l0.fp", w0,
-        core.CompressionConfig(algorithm="fp", weight_sharing=True,
-                               max_share_rel_err=0.06))
-    mv = LCCMatvec(cd_fp)
-    xs = np.random.default_rng(1).standard_normal((cfg.d_model, 4))
-    drift = np.abs(np.asarray(mv(jnp.asarray(xs, jnp.float32)))
-                   - cd_fp.apply(xs)).max()
-    n_chains = len(mv.packed.col_slices)
-    print(f"   fused LCC kernel ({n_chains} FP chains, one launch) vs "
-          f"reference drift: {drift:.2e}")
+    print("== 2. Algorithm 1 over every FFN projection (adapter registry) ==")
+    # FP decompositions execute as fused whole-chain kernel launches at serve
+    # time; drop 'include' to also compress the attention projections
+    art = api.compress_model(
+        params, cfg,
+        CompressionConfig(algorithm="fp", weight_sharing=True,
+                          max_share_rel_err=0.06),
+        include="ffn.")
+    print(art.report.table())
 
-    print("== 3. serve batched requests: original vs compressed ==")
+    print("== 3. artifact round-trip: compress once offline, serve many ==")
+    with tempfile.TemporaryDirectory() as d:
+        art.save(d)
+        art = CompressedModel.load(d)
+    n_packed = sum(1 for p in art.packed.values() if p.col_slices)
+    print(f"   reloaded {len(art.records)} compressed units "
+          f"({n_packed} with fused FP kernel buffers)")
+
+    print("== 4. serve batched requests: original vs compressed-kernel ==")
     prompts = [lm.sample(1, 8, seed=100 + i)[0, :8].tolist() for i in range(6)]
     eng = ServingEngine(params, cfg, n_slots=4, max_len=64)
-    eng_c = ServingEngine(params_c, cfg, n_slots=4, max_len=64)
+    eng_c = ServingEngine(artifact=art, n_slots=4, max_len=64)
+    assert eng_c.matvec_overrides is not None  # FFNs on the kernel path
     res = eng.generate(prompts, max_new_tokens=12)
     res_c = eng_c.generate(prompts, max_new_tokens=12)
     agree = np.mean([np.mean(np.array(a.tokens[a.prompt_len:])
@@ -80,7 +86,7 @@ def main() -> None:
     print(f"   greedy-token agreement original vs compressed: {agree:.2%}")
     print(f"   chain-validity original {validity(res):.2%} | "
           f"compressed {validity(res_c):.2%}")
-    print(f"   total adds ratio (FFN projections): {report.ratio('lcc'):.1f}x")
+    print(f"   total adds ratio (FFN projections): {art.report.ratio('lcc'):.1f}x")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 test suite + a bounded smoke of the quickstart.
+#
+#   scripts/ci.sh            # from the repo root
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 test suite =="
+python -m pytest -x -q
+
+echo "== quickstart smoke (30s budget) =="
+timeout 30 python examples/quickstart.py
+
+echo "CI OK"

@@ -109,6 +109,16 @@ class Checkpointer:
                 out.append(int(m.group(1)))
         return sorted(out)
 
+    def restore_flat(self, step: int) -> dict:
+        """Raw ``{flat_name: array}`` payload of one step, every leaf
+        crc-verified.  Used by consumers (e.g. ``core.artifact``) whose tree
+        structure is recorded in the payload itself rather than supplied as a
+        like-tree."""
+        d = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(d, f"shard_{self.proc}.msgpack"), "rb") as f:
+            payload = msgpack.unpackb(f.read(), raw=False)
+        return {name: _unpack_leaf(leaf) for name, leaf in payload.items()}
+
     def restore(self, step: int, like_tree):
         d = os.path.join(self.dir, f"step_{step:010d}")
         with open(os.path.join(d, f"shard_{self.proc}.msgpack"), "rb") as f:

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["MoESpec", "MLASpec", "SSMSpec", "ArchConfig", "ShapeCell", "SHAPE_CELLS",
-           "input_specs", "reduced_config"]
+           "input_specs", "reduced_config", "arch_to_dict", "arch_from_dict"]
 
 
 @dataclass(frozen=True)
@@ -155,6 +155,30 @@ def input_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
     d = {"token": jax.ShapeDtypeStruct((b, 1), i32),
          "pos": jax.ShapeDtypeStruct((b,), i32)}
     return d
+
+
+def arch_to_dict(cfg: ArchConfig) -> dict:
+    """JSON-serializable form of an ArchConfig (inverse: ``arch_from_dict``).
+
+    Used by the compressed-model artifact so an offline compression run can be
+    served later without access to the config object that produced it."""
+    from dataclasses import asdict
+
+    d = asdict(cfg)
+    d["mrope_sections"] = list(d["mrope_sections"])
+    return d
+
+
+def arch_from_dict(d: dict) -> ArchConfig:
+    d = dict(d)
+    if d.get("moe") is not None:
+        d["moe"] = MoESpec(**d["moe"])
+    if d.get("mla") is not None:
+        d["mla"] = MLASpec(**d["mla"])
+    if d.get("ssm") is not None:
+        d["ssm"] = SSMSpec(**d["ssm"])
+    d["mrope_sections"] = tuple(d["mrope_sections"])
+    return ArchConfig(**d)
 
 
 def reduced_config(cfg: ArchConfig, **overrides) -> ArchConfig:

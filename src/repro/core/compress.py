@@ -120,7 +120,12 @@ def compress_dense_matrix(
         if cfg.max_share_rel_err is not None and rel > cfg.max_share_rel_err:
             shared = None  # too lossy without eq.-(9) retraining: skip sharing
         else:
-            shared = SharedLayer(centroids=cents, labels=labels)
+            # store labels at their deployment width (uint16 covers any layer
+            # whose kept inputs fit a 16-bit index; int32 otherwise) so byte
+            # accounting below reads the true stored size, not an assumption
+            # about the clustering routine's int64 output
+            label_dtype = np.uint16 if cents.shape[1] <= np.iinfo(np.uint16).max else np.int32
+            shared = SharedLayer(centroids=cents, labels=labels.astype(label_dtype))
             target = cents
             pre_agg = shared.pre_aggregation_adds()
 
@@ -142,7 +147,7 @@ def compress_dense_matrix(
             lc.stage_adds["shared"] = shared_layer_adds(shared, cfg.frac_bits)
         lc.stage_adds["lcc"] = pre_agg + dec.num_adds()
         lc.stage_bytes["dense_bf16"] = 2 * w.shape[0] * w.shape[1]
-        lc.stage_bytes["lcc"] = dec.storage_bytes() + (shared.labels.nbytes // 4 if shared else 0)
+        lc.stage_bytes["lcc"] = dec.storage_bytes() + (shared.labels.nbytes if shared else 0)
         lc.extra["kept_cols"] = int(kept.size)
         lc.extra["clusters"] = int(shared.n_clusters) if shared else None
         lc.extra["achieved_snr_db"] = dec.meta.get("achieved_snr_db")

@@ -2,6 +2,14 @@
 
 All launchers, trainers and the dry-run go through these five functions so a
 new family only has to plug in here.
+
+The same file is the dispatch surface for *compression*: a compressible-unit
+adapter registry (:mod:`repro.models.compress_adapters`) maps every family to
+its dense matrices / conv kernels, and :func:`compress_model` runs Algorithm 1
+over all of them, returning a serializable
+:class:`repro.core.artifact.CompressedModel` that the serving engine executes
+natively (fused LCC kernels for FP decompositions, dense-effective weights
+otherwise).
 """
 from __future__ import annotations
 
@@ -13,7 +21,9 @@ from repro.configs.base import ArchConfig, ShapeCell
 from . import transformer, whisper
 
 __all__ = ["init_params", "abstract_params", "train_loss", "prefill", "decode",
-           "init_decode_state", "abstract_decode_state"]
+           "init_decode_state", "abstract_decode_state",
+           "family_of", "register_compress_adapter", "compressible_units",
+           "rebind", "compress_model"]
 
 
 def init_params(key, cfg: ArchConfig):
@@ -44,10 +54,19 @@ def prefill(params, cfg: ArchConfig, batch, *, unroll: bool = False,
     return h, cache
 
 
-def decode(params, cfg: ArchConfig, state, token, pos, *, unroll: bool = False):
+def decode(params, cfg: ArchConfig, state, token, pos, *, unroll: bool = False,
+           matvec_overrides=None):
+    """One decode step.  ``matvec_overrides`` routes selected projections
+    through custom matvec callables (the compressed-serving hook; see
+    ``transformer.decode_step``)."""
     if cfg.enc_layers > 0:
+        if matvec_overrides is not None:
+            raise ValueError(
+                "matvec overrides target dense-FFN decode; encoder-decoder "
+                "models serve through their dense-effective params")
         return whisper.decode_step(params, cfg, state, token, pos, unroll=unroll)
-    return transformer.decode_step(params, cfg, state, token, pos, unroll=unroll)
+    return transformer.decode_step(params, cfg, state, token, pos, unroll=unroll,
+                                   matvec_overrides=matvec_overrides)
 
 
 def init_decode_state(cfg: ArchConfig, batch: int, smax: int):
@@ -59,3 +78,107 @@ def init_decode_state(cfg: ArchConfig, batch: int, smax: int):
 def abstract_decode_state(cfg: ArchConfig, cell: ShapeCell):
     return jax.eval_shape(
         lambda: init_decode_state(cfg, cell.global_batch, cell.seq_len))
+
+
+# ---------------------------------------------------------------------------
+# compression surface: family adapter registry + whole-model Algorithm 1
+# ---------------------------------------------------------------------------
+
+
+def family_of(cfg) -> str:
+    """Adapter-registry key for a config object (ArchConfig or ResNetConfig)."""
+    fam = getattr(cfg, "family", None)
+    if fam is not None:
+        return fam
+    from .resnet import ResNetConfig
+
+    if isinstance(cfg, ResNetConfig):
+        return "resnet"
+    raise TypeError(f"cannot infer architecture family from {type(cfg).__name__}")
+
+
+def register_compress_adapter(family: str, site_fn) -> None:
+    """Register ``site_fn(params, cfg) -> list[DenseSite | ConvSite]`` for a
+    family.  Built-in families are pre-registered by
+    :mod:`repro.models.compress_adapters`."""
+    from . import compress_adapters
+
+    compress_adapters.register_family(family, site_fn)
+
+
+def compressible_units(params, cfg):
+    """Every compressible unit (CompressibleDense / CompressibleConv) of the
+    model, via the family's registered adapter."""
+    from . import compress_adapters
+
+    return compress_adapters.units_from_sites(
+        params, compress_adapters.sites_for(params, cfg))
+
+
+def rebind(params, cfg, name: str, effective):
+    """Write a unit's dense-effective map back into a new params pytree."""
+    from . import compress_adapters
+
+    for site in compress_adapters.sites_for(params, cfg):
+        if site.name == name:
+            return compress_adapters.rebind_site(params, site, effective)
+    raise KeyError(f"no compressible unit named {name!r} for this model")
+
+
+def compress_model(params, cfg, compression=None, *, include=None,
+                   conv_channel_subsample=None, progress=None,
+                   build_packed: bool = True):
+    """Steps 2-3 of Algorithm 1 over every compressible unit of any family.
+
+    Returns a :class:`repro.core.artifact.CompressedModel`: per-unit
+    compressed records, packed fused-kernel buffers (FP decompositions),
+    dense-effective params (drop-in for the stock XLA forward), and the
+    :class:`ModelCostReport`.  ``include`` filters unit names (callable or
+    prefix string); ``build_packed=False`` skips the kernel-buffer packing
+    when only the report/effective weights are wanted.
+    """
+    import numpy as np
+
+    from repro import core
+    from repro.core.artifact import CompressedModel
+    from repro.kernels import ops
+
+    from . import compress_adapters
+
+    if compression is None:
+        compression = core.CompressionConfig(algorithm="fp", weight_sharing=True,
+                                             max_share_rel_err=0.06)
+    report = core.ModelCostReport()
+    sites = compress_adapters.sites_for(params, cfg)
+    if include is not None:
+        keep = include if callable(include) else lambda n: n.startswith(include)
+        sites = [s for s in sites if keep(s.name)]
+    records: dict[str, object] = {}
+    packed: dict[str, object] = {}
+    params_c = params
+    for site in sites:
+        if progress:
+            progress(site.name)
+        if isinstance(site, compress_adapters.DenseSite):
+            w = site.weight(params)
+            cd = core.compress_dense_matrix(site.name, w, compression, report)
+            records[site.name] = cd
+            eff = np.zeros_like(w)
+            eff[:, cd.kept_columns] = cd.effective
+            params_c = compress_adapters.rebind_site(params_c, site, eff)
+            if build_packed:
+                packed[site.name] = ops.pack_decomposition(cd.decomposition)
+        else:
+            kernel = site.kernel(params)
+            rec = core.compress_conv_kernel(
+                site.name, kernel, compression, report,
+                channel_subsample=conv_channel_subsample)
+            records[site.name] = rec
+            eff_k = compress_adapters.effective_conv_kernel(
+                kernel, rec, compression.conv_method)
+            params_c = compress_adapters.rebind_site(params_c, site, eff_k)
+    return CompressedModel(config=cfg, params=params_c, records=records,
+                           packed=packed, report=report, compression=compression)
+
+
+from . import compress_adapters as _compress_adapters  # noqa: E402,F401  (registers built-in families)

@@ -392,10 +392,54 @@ def init_decode_state(cfg: ArchConfig, batch: int, smax: int):
     }
 
 
-def decode_step(params, cfg: ArchConfig, state, token, pos, *, unroll: bool = False):
-    """One decode step: (logits [B, V], new state). token [B,1], pos [B]."""
+def _override_matvec(fn, x):
+    """Run a features-major matvec (x [K, B] -> [N, B]) on [B, S, d] acts."""
+    b, s, d = x.shape
+    y = fn(x.reshape(b * s, d).astype(jnp.float32).T)
+    return y.T.reshape(b, s, -1).astype(x.dtype)
+
+
+def _ffn_with_overrides(overrides, li: int):
+    """SwiGLU whose gate/up/down may be routed through compressed matvecs.
+
+    ``overrides`` maps projection name -> per-layer list of callables (None
+    entries fall back to the dense weight); the callables are the serving
+    engine's fused-LCC kernels, so a compressed model's FFNs execute as
+    shift-add chains *inside* the jitted decode step.
+    """
+    def proj(p, name, x):
+        fns = overrides.get(name)
+        fn = fns[li] if fns is not None and li < len(fns) else None
+        if fn is None:
+            return linear(p[name], x)
+        return _override_matvec(fn, x)
+
+    def ffn(p, x):
+        g = constrain(proj(p, "gate", x), "batch", None, "model")
+        u = constrain(proj(p, "up", x), "batch", None, "model")
+        y = proj(p, "down", jax.nn.silu(g) * u)
+        return constrain(y, "batch", None, None)
+
+    return ffn
+
+
+def decode_step(params, cfg: ArchConfig, state, token, pos, *, unroll: bool = False,
+                matvec_overrides=None):
+    """One decode step: (logits [B, V], new state). token [B,1], pos [B].
+
+    ``matvec_overrides`` (compressed serving): ``{"gate"|"up"|"down":
+    [callable|None per layer]}`` — those FFN projections run through the given
+    features-major matvecs (the fused LCC kernel path) instead of the dense
+    weights.  Only the dense-FFN attention families support overrides; the
+    layer loop is unrolled so each layer can bind its own kernel buffers.
+    """
     x = jnp.take(params["embed"], token, axis=0).astype(cfg.cdtype)
     blocks = params["blocks"]
+    if matvec_overrides is not None and (
+            cfg.family in ("ssm", "hybrid") or cfg.moe is not None):
+        raise ValueError(
+            f"matvec overrides target dense-FFN decode; family {cfg.family!r} "
+            "with MoE/SSM blocks serves through its dense-effective params")
 
     if cfg.family == "ssm":
         def body(x, xs):
@@ -481,30 +525,46 @@ def decode_step(params, cfg: ArchConfig, state, token, pos, *, unroll: bool = Fa
                               state["kpos"]), unroll)
         new = {"c_kv": outs[0], "k_rope": outs[1], "kpos": outs[2]}
     else:
-        def body(x, xs):
-            bp, k, v, kp = xs
-            cache = KVCache(k=k, v=v, kpos=kp)
-            y, c2 = attention_decode(
-                bp["attn"], _norm(cfg, bp["ln1"], x), cache, pos,
-                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
-                window=cfg.attn_window,
-                rope_theta=None if cfg.pos in ("none", "mrope") else cfg.rope_theta,
-                mrope_sections=cfg.mrope_sections if cfg.pos == "mrope" else None,
-                mrope_positions=jnp.broadcast_to(pos[None, :, None], (3, pos.shape[0], 1))
-                if cfg.pos == "mrope" else None)
-            x = x + y
-            ffn_in = _norm(cfg, bp["ln2"], x)
-            if cfg.moe is not None:
+        def make_body(ffn_fn):
+            def body(x, xs):
+                bp, k, v, kp = xs
+                cache = KVCache(k=k, v=v, kpos=kp)
+                y, c2 = attention_decode(
+                    bp["attn"], _norm(cfg, bp["ln1"], x), cache, pos,
+                    n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                    window=cfg.attn_window,
+                    rope_theta=None if cfg.pos in ("none", "mrope") else cfg.rope_theta,
+                    mrope_sections=cfg.mrope_sections if cfg.pos == "mrope" else None,
+                    mrope_positions=jnp.broadcast_to(pos[None, :, None], (3, pos.shape[0], 1))
+                    if cfg.pos == "mrope" else None)
+                x = x + y
+                ffn_in = _norm(cfg, bp["ln2"], x)
+                y = ffn_fn(bp["ffn"], ffn_in)
+                return x + y, (c2.k, c2.v, c2.kpos)
+            return body
+
+        if cfg.moe is not None:
+            def default_ffn(p, ffn_in):
                 moe_fn = moe_ffn_manual if cfg.moe_manual else moe_ffn
-                y, _ = moe_fn(bp["ffn"], ffn_in, n_experts=cfg.moe.n_experts,
+                y, _ = moe_fn(p, ffn_in, n_experts=cfg.moe.n_experts,
                               top_k=cfg.moe.top_k,
                               capacity_factor=cfg.moe.capacity_factor,
                               norm_topk=cfg.moe.norm_topk)
-            else:
-                y = swiglu(bp["ffn"], ffn_in)
-            return x + y, (c2.k, c2.v, c2.kpos)
+                return y
+        else:
+            default_ffn = swiglu
 
-        x, outs = _scan(body, x, (blocks, state["k"], state["v"], state["kpos"]), unroll)
+        xs_all = (blocks, state["k"], state["v"], state["kpos"])
+        if matvec_overrides is None:
+            x, outs = _scan(make_body(default_ffn), x, xs_all, unroll)
+        else:
+            # unrolled layer loop: each layer binds its own kernel buffers
+            per_layer = []
+            for li in range(cfg.n_layers):
+                xs_li = jax.tree.map(lambda a: a[li], xs_all)
+                x, out = make_body(_ffn_with_overrides(matvec_overrides, li))(x, xs_li)
+                per_layer.append(out)
+            outs = jax.tree.map(lambda *a: jnp.stack(a), *per_layer)
         new = {"k": outs[0], "v": outs[1], "kpos": outs[2]}
 
     h = _norm(cfg, params["final_ln"], x)

@@ -1,28 +1,31 @@
 """Batched serving engine: prefill + decode with slot-based continuous batching.
 
 The engine keeps a fixed decode batch of ``n_slots``; finished sequences free
-their slot and queued requests are prefilled into it (KV written at their
-positions).  Greedy or temperature sampling.  Works for every decode-capable
-family through models.api.
+their slot and queued requests are prefilled into it (one bulk ``api.prefill``
+writes the slot's KV cache in a single forward).  Greedy or temperature
+sampling.  Works for every decode-capable family through models.api.
 
-Compressed serving is first-class: :func:`compress_ffn_for_serving` runs the
-paper's Algorithm 1 over every FFN projection and returns (a) dense-effective
-weights for the stock XLA forward and (b) :class:`LCCMatvec` closures per
-projection — prune + (optional) weight-sharing segment-sum + the LCC runtime.
-FP decompositions run their whole factor chain as ONE fused Pallas launch
-(``repro.kernels.lcc_chain_matmul``, the shift-add runtime the paper
-targets); FS decompositions evaluate through their dense equivalent.
+Compressed serving is first-class and artifact-driven: compress offline with
+``models.api.compress_model``, save the :class:`~repro.core.artifact.
+CompressedModel`, and construct ``ServingEngine(artifact=art)``.  The engine
+serves the artifact's dense-effective params and — for dense-FFN families —
+routes every FFN projection through :class:`LCCMatvec` *inside* the jitted
+decode step, so FP decompositions execute their whole factor chain as ONE
+fused Pallas launch (``repro.kernels.lcc_chain_matmul``, the shift-add
+runtime the paper targets).  FS decompositions evaluate through their dense
+equivalent.  :func:`compress_ffn_for_serving` remains as the legacy
+FFN-only wrapper over the same pipeline.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.models import api, transformer
+from repro.models import api
 
 __all__ = ["ServingEngine", "GenerationResult", "LCCMatvec",
            "compress_ffn_for_serving"]
@@ -36,11 +39,27 @@ class GenerationResult:
 
 
 class ServingEngine:
-    def __init__(self, params, cfg: ArchConfig, *, n_slots: int = 8,
+    """``ServingEngine(params, cfg)`` serves raw weights; ``ServingEngine(
+    artifact=compressed_model)`` serves a compression artifact (params and
+    config come from the artifact, and FFN projections of dense-FFN families
+    run on the fused LCC kernel path unless ``use_kernel=False``)."""
+
+    def __init__(self, params=None, cfg: ArchConfig | None = None, *,
+                 artifact=None, n_slots: int = 8,
                  max_len: int = 512, eos_id: int | None = None,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 use_kernel: bool = True, bulk_prefill: bool = True,
+                 interpret: bool | None = None):
+        if artifact is not None:
+            if cfg is None:
+                cfg = artifact.config
+            if params is None:
+                params = artifact.params
+        if params is None or cfg is None:
+            raise ValueError("ServingEngine needs (params, cfg) or artifact=...")
         self.params = params
         self.cfg = cfg
+        self.artifact = artifact
         self.n_slots = n_slots
         self.max_len = max_len
         # per-request decode budget; generate() overrides it per call, but a
@@ -48,6 +67,7 @@ class ServingEngine:
         self.max_new = max_len
         self.eos = eos_id
         self.temp = temperature
+        self.bulk_prefill = bulk_prefill
         self.key = jax.random.PRNGKey(seed)
         self.state = api.init_decode_state(cfg, n_slots, max_len)
         self.pos = np.zeros(n_slots, np.int64)
@@ -55,7 +75,36 @@ class ServingEngine:
         self.results: dict[int, GenerationResult] = {}
         self.slot_req: dict[int, int] = {}
         self._next_req = 0
-        self._decode = jax.jit(lambda p, s, t, pos: api.decode(p, cfg, s, t, pos))
+        self._prefill_fns: dict[int, object] = {}
+        self.matvec_overrides = (
+            self._build_overrides(artifact, interpret) if use_kernel else None)
+        ov = self.matvec_overrides
+        self._decode = jax.jit(
+            lambda p, s, t, pos: api.decode(p, cfg, s, t, pos,
+                                            matvec_overrides=ov))
+
+    @staticmethod
+    def _build_overrides(artifact, interpret):
+        """Per-layer LCCMatvec table for the FFN projections of a dense-FFN
+        artifact (None when the artifact has no routable units)."""
+        if artifact is None or api.family_of(artifact.config) not in ("dense", "vlm"):
+            return None
+        cfg = artifact.config
+        ov: dict[str, list] = {}
+        for proj in ("gate", "up", "down"):
+            fns: list = [None] * cfg.n_layers
+            found = False
+            for li in range(cfg.n_layers):
+                name = f"ffn.{proj}.l{li}"
+                rec = artifact.records.get(name)
+                if rec is None:
+                    continue
+                fns[li] = LCCMatvec(rec, packed=artifact.packed.get(name),
+                                    interpret=interpret)
+                found = True
+            if found:
+                ov[proj] = fns
+        return ov or None
 
     # ------------------------------------------------------------------ API
     def submit(self, prompt: list[int]) -> int:
@@ -71,18 +120,71 @@ class ServingEngine:
         slot = int(free[0])
         rid = self._next_req
         self._next_req += 1
-        # prefill token-by-token through decode (single-request path keeps the
-        # cache layout identical; bulk prefill via forward() feeds training)
-        for t, tok in enumerate(prompt):
-            _logits, self.state = self._decode(
-                self.params, self.state,
-                self._token_batch(slot, tok), self._pos_batch(slot, t))
+        if self.bulk_prefill and ("k" in self.state or "c_kv" in self.state):
+            # one bulk forward writes the whole slot cache (and resets stale
+            # kpos entries from the slot's previous occupant)
+            self._prefill_slot(slot, prompt)
+        else:
+            # stateful families (ssm/hybrid) keep the tokenwise path: their
+            # per-layer recurrent states live in scan-stacked layouts that a
+            # bulk forward does not expose per-slot
+            self._prefill_slot_tokenwise(slot, prompt)
         self.pos[slot] = len(prompt)
         self.active[slot] = True
         self.slot_req[slot] = rid
         self.results[rid] = GenerationResult(tokens=list(prompt),
                                              prompt_len=len(prompt), finished=False)
         return rid
+
+    # -------------------------------------------------------------- prefill
+    def _prefill_slot_tokenwise(self, slot: int, prompt: list[int]) -> None:
+        """Legacy prefill: one decode step per prompt token (kept as the
+        fallback for recurrent-state families and as the bulk path's
+        equivalence/latency baseline in benchmarks)."""
+        for t, tok in enumerate(prompt):
+            _logits, self.state = self._decode(
+                self.params, self.state,
+                self._token_batch(slot, tok), self._pos_batch(slot, t))
+
+    def _prefill_slot(self, slot: int, prompt: list[int]) -> None:
+        """Bulk prefill: ONE ``api.prefill`` forward over the prompt writes
+        the slot's KV cache at its positions.  Prompts are right-padded to
+        power-of-two buckets so recompilation is bounded (log2(max_len)
+        buckets); padded positions stay masked via kpos == -1."""
+        plen = len(prompt)
+        s_pad = min(self.max_len, max(8, 1 << (plen - 1).bit_length()))
+        if s_pad not in self._prefill_fns:
+            cfg = self.cfg
+            self._prefill_fns[s_pad] = jax.jit(
+                lambda p, t: api.prefill(p, cfg, {"tokens": t},
+                                         collect_cache=True))
+        toks = np.zeros((1, s_pad), np.int32)
+        toks[0, :plen] = prompt
+        _h, caches = self._prefill_fns[s_pad](self.params, jnp.asarray(toks))
+        st = dict(self.state)
+        if "k" in st:
+            k_all, v_all = caches  # [L, 1, S_pad, Hkv, Dh]
+            eff = st["k"].shape[2]  # ring size when windowed, else max_len
+            ps = np.arange(max(0, plen - eff), plen)
+            slots = ps % eff if self.cfg.attn_window is not None else ps
+            kpos_row = np.full(eff, -1, np.int64)
+            kpos_row[slots] = ps
+            st["k"] = st["k"].at[:, slot, slots].set(
+                k_all[:, 0, ps].astype(st["k"].dtype))
+            st["v"] = st["v"].at[:, slot, slots].set(
+                v_all[:, 0, ps].astype(st["v"].dtype))
+        else:  # MLA latent cache
+            c_kv, k_rope = caches  # [L, 1, S_pad, dc] / [L, 1, S_pad, Dr]
+            eff = st["c_kv"].shape[2]
+            ps = np.arange(plen)
+            kpos_row = np.full(eff, -1, np.int64)
+            kpos_row[:plen] = ps
+            st["c_kv"] = st["c_kv"].at[:, slot, :plen].set(
+                c_kv[:, 0, :plen].astype(st["c_kv"].dtype))
+            st["k_rope"] = st["k_rope"].at[:, slot, :plen].set(
+                k_rope[:, 0, :plen].astype(st["k_rope"].dtype))
+        st["kpos"] = st["kpos"].at[:, slot].set(jnp.asarray(kpos_row, jnp.int32))
+        self.state = st
 
     def step(self) -> None:
         """One decode step for every active slot."""
@@ -155,14 +257,18 @@ class LCCMatvec:
 
     Prune (kept_columns gather) -> optional weight-sharing segment-sum (paper
     eq. (10)) -> the whole FP decomposition in a single ``lcc_chain_matmul``
-    launch.  Built from a ``core.compress.CompressedDense`` record.
+    launch.  Built from a ``core.compress.CompressedDense`` record; pass
+    ``packed=`` to reuse an artifact's pre-packed kernel buffers instead of
+    re-packing the decomposition.
     """
 
-    def __init__(self, cd, *, block: int = 128, interpret: bool | None = None):
+    def __init__(self, cd, *, packed=None, block: int = 128,
+                 interpret: bool | None = None):
         from repro.kernels import ops
 
         self.name = cd.name
-        self.packed = ops.pack_decomposition(cd.decomposition, block)
+        self.packed = (packed if packed is not None
+                       else ops.pack_decomposition(cd.decomposition, block))
         self.kept = jnp.asarray(np.asarray(cd.kept_columns), jnp.int32)
         self.labels = (jnp.asarray(cd.shared.labels, jnp.int32)
                        if cd.shared is not None else None)
@@ -191,44 +297,35 @@ class LCCMatvec:
 def compress_ffn_for_serving(params, cfg: ArchConfig, compression=None, *,
                              report=None, interpret: bool | None = None,
                              build_matvecs: bool = True):
-    """Algorithm 1 over every FFN projection of a dense transformer.
+    """Legacy FFN-only wrapper over :func:`models.api.compress_model`.
 
-    Returns ``(params_c, matvecs, report)``: ``params_c`` are the original
-    params with FFN weights replaced by their compressed dense equivalent
-    (drop-in for the stock XLA forward, used by :class:`ServingEngine`);
-    ``matvecs[proj][layer]`` is the :class:`LCCMatvec` running the same map on
-    the fused shift-add kernel path.  ``build_matvecs=False`` skips the
-    packing + device upload when the caller only wants the dense-effective
-    params (``matvecs`` comes back empty).
+    Returns ``(params_c, matvecs, report)`` for the FFN projections of a
+    dense-FFN transformer: ``params_c`` are the full params with FFN weights
+    replaced by their compressed dense equivalent, ``matvecs[proj][layer]``
+    the :class:`LCCMatvec` kernels.  Other families are compressed through
+    ``api.compress_model`` + ``ServingEngine(artifact=...)`` directly.
     """
     from repro import core
 
     if cfg.moe is not None or cfg.family in ("ssm", "hybrid") or cfg.enc_layers:
         raise ValueError(
-            f"FFN compression targets dense-FFN architectures, not {cfg.family!r} "
-            "(MoE/SSM/hybrid/encoder-decoder FFNs need per-family adapters)")
+            f"compress_ffn_for_serving wraps the dense-FFN fast path; family "
+            f"{cfg.family!r} is served via models.api.compress_model(...) and "
+            "ServingEngine(artifact=...)")
     if compression is None:
         compression = core.CompressionConfig(algorithm="fs", weight_sharing=True,
                                              max_share_rel_err=0.06)
-    if report is None:
-        report = core.ModelCostReport()
-    ffn = params["blocks"]["ffn"]
-    new_ffn = dict(ffn)
+    art = api.compress_model(params, cfg, compression, include="ffn.",
+                             build_packed=build_matvecs)
+    if report is not None:
+        for lc in art.report.layers:
+            report.add(lc)
     matvecs: dict[str, list[LCCMatvec]] = {}
-    for proj in ("gate", "up", "down"):
-        stack = np.asarray(ffn[proj]["w"], np.float64)
-        eff_stack, mvs = [], []
-        for li in range(stack.shape[0]):
-            w = stack[li].T  # act as y = W x (paper layout)
-            cd = core.compress_dense_matrix(f"ffn.{proj}.l{li}", w,
-                                            compression, report)
-            eff = np.zeros_like(w)
-            eff[:, cd.kept_columns] = cd.effective
-            eff_stack.append(eff.T.astype(np.float32))
-            if build_matvecs:
-                mvs.append(LCCMatvec(cd, interpret=interpret))
-        new_ffn[proj] = {"w": jnp.asarray(np.stack(eff_stack))}
-        matvecs[proj] = mvs
-    params_c = dict(params)
-    params_c["blocks"] = {**params["blocks"], "ffn": new_ffn}
-    return params_c, matvecs, report
+    if build_matvecs:
+        for proj in ("gate", "up", "down"):
+            matvecs[proj] = [
+                LCCMatvec(art.records[f"ffn.{proj}.l{li}"],
+                          packed=art.packed.get(f"ffn.{proj}.l{li}"),
+                          interpret=interpret)
+                for li in range(cfg.n_layers)]
+    return art.params, matvecs, art.report if report is None else report
