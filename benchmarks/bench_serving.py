@@ -1,0 +1,138 @@
+"""Serving-loop benchmark: steady-state decode throughput and prefill latency,
+dense vs compressed, at n_slots in {1, 8} — emitted as machine-readable
+``BENCH_serving.json`` so the perf trajectory is tracked across PRs.
+
+    PYTHONPATH=src python benchmarks/bench_serving.py [--smoke] [--out FILE]
+
+CPU-container numbers measure the serving loop's dispatch/transfer overhead
+(interpret-mode Pallas for the compressed path), not TPU kernel speed; the
+cross-PR signal is the tok/s trend of the identical workload.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import jax
+
+
+def _drive_steps(eng, n_steps: int) -> float:
+    """Time n_steps fused decode steps with every slot active; returns tok/s."""
+    t0 = time.time()
+    for _ in range(n_steps):
+        eng.step()
+    dt = time.time() - t0
+    return eng.n_slots * n_steps / dt
+
+
+def bench_engine(make_engine, *, n_slots: int, prompt_len: int,
+                 steps: int, warmup: int) -> dict:
+    from repro.data.synthetic import MarkovLM
+
+    eng = make_engine(n_slots)
+    # every slot must stay active through warmup + timed steps: cap at the
+    # decode headroom the KV cache leaves after the prompt
+    steps = max(1, min(steps, eng.max_len - prompt_len - warmup - 1))
+    lm = MarkovLM(vocab=eng.cfg.vocab, k=8, seed=0)
+    prompts = [lm.sample(1, prompt_len, seed=i)[0, :prompt_len].tolist()
+               for i in range(n_slots + 1)]
+
+    # prefill: warm the bucket's compile cache with a throwaway request (one
+    # generated token, then the slot frees), then time a steady-state submit
+    eng.submit(prompts[0], max_new=1)
+    while eng.active.any():
+        eng.step()
+    jax.block_until_ready(eng.state)
+    t0 = time.time()
+    eng.submit(prompts[1], max_new=eng.max_len)
+    jax.block_until_ready(eng.state)  # async dispatch: wait for the prefill
+    prefill_s = time.time() - t0
+    for p in prompts[2:]:
+        eng.submit(p, max_new=eng.max_len)
+
+    for _ in range(warmup):  # compile + steady-state the fused step
+        eng.step()
+    tok_s = _drive_steps(eng, steps)
+    assert eng.active.sum() == n_slots, "a slot finished mid-measurement"
+    return {"n_slots": n_slots, "prompt_len": prompt_len,
+            "steps_timed": steps,  # post-clamp, the count actually measured
+            "decode_tok_s": round(tok_s, 2),
+            "prefill_ms": round(prefill_s * 1e3, 2),
+            "step_dispatches": eng.step_dispatches}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-bounded: tiny model, few steps")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="timed decode steps (default 3 smoke / 20 full; "
+                         "clamped to the KV-cache headroom)")
+    args = ap.parse_args()
+
+    from repro import core
+    from repro.configs import get_arch
+    from repro.configs.base import reduced_config
+    from repro.models import api
+    from repro.serving.engine import ServingEngine
+
+    if args.smoke:
+        cfg = reduced_config(get_arch("olmo-1b"), d_model=32, n_heads=2,
+                             n_kv_heads=2, head_dim=16, d_ff=48, vocab=64,
+                             n_layers=2)
+        steps = 3 if args.steps is None else max(1, args.steps)
+        warmup, prompt_len, max_len = 1, 8, 64
+    else:
+        cfg = reduced_config(get_arch("olmo-1b"))
+        steps = 20 if args.steps is None else max(1, args.steps)
+        warmup, prompt_len, max_len = 3, 16, 256
+
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    artifact = api.compress_model(
+        params, cfg,
+        core.CompressionConfig(algorithm="fp", weight_sharing=True,
+                               max_share_rel_err=0.06),
+        include="ffn.")
+
+    def dense(n):
+        return ServingEngine(params, cfg, n_slots=n, max_len=max_len)
+
+    def compressed(n):
+        return ServingEngine(artifact=artifact, n_slots=n, max_len=max_len)
+
+    results = []
+    for n_slots in (1, 8):
+        for mode, make in (("dense", dense), ("compressed", compressed)):
+            t0 = time.time()
+            row = {"mode": mode, **bench_engine(
+                make, n_slots=n_slots, prompt_len=prompt_len,
+                steps=steps, warmup=warmup)}
+            row["wall_s"] = round(time.time() - t0, 2)
+            results.append(row)
+            print(f"{mode:>10} n_slots={n_slots}: "
+                  f"{row['decode_tok_s']:>8} tok/s decode, "
+                  f"{row['prefill_ms']:>7} ms prefill")
+
+    report = {
+        "bench": "serving",
+        "arch": cfg.name,
+        "smoke": args.smoke,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "platform": platform.machine(),
+        "steps_requested": steps,
+        "compression": {"algorithm": "fp",
+                        "ratio_lcc": round(artifact.report.ratio("lcc"), 2)},
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

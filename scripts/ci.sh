@@ -13,4 +13,11 @@ python -m pytest -x -q
 echo "== quickstart smoke (30s budget) =="
 timeout 30 python examples/quickstart.py
 
+echo "== serving bench smoke (120s budget) =="
+# /tmp output: the tracked BENCH_serving.json is refreshed deliberately per
+# PR, not dirtied by every CI run's machine-dependent numbers
+timeout 120 python benchmarks/bench_serving.py --smoke --out /tmp/BENCH_serving.json
+python -c "import json; r = json.load(open('/tmp/BENCH_serving.json')); \
+assert r['results'] and all(x['decode_tok_s'] > 0 for x in r['results'])"
+
 echo "CI OK"

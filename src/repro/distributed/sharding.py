@@ -124,8 +124,16 @@ def batch_pspecs(batch_tree: Any, mesh: Mesh):
 
 
 def decode_state_pspecs(state_tree: Any, mesh: Mesh):
-    """KV caches / SSM states: batch axis over ("pod","data") when divisible,
-    else heads/feature dim over "model"; layer-stack leading axis skipped."""
+    """KV caches / SSM states: batch (serving: slot) axis over ("pod","data")
+    when divisible, head/feature dims over "model"; layer-stack leading axis
+    skipped.
+
+    The "model" pick prefers trailing head/feature axes (axis >= 3) over the
+    sequence axis (axis 2): head-parallel attention keeps the per-shard cache
+    contiguous in time, while a time-sharded cache forces a collective on
+    every decode-step append.  Integer leaves (kpos-style position maps) stay
+    replicated beyond the batch axis — they are tiny and feed mask math on
+    every shard."""
     baxes = _batch_axes(mesh)
     bsize = int(np.prod([mesh_axis_size(mesh, a) for a in ("pod", "data")]))
     dsize = mesh_axis_size(mesh, "data")
@@ -137,14 +145,14 @@ def decode_state_pspecs(state_tree: Any, mesh: Mesh):
             return P()
         spec: list = [None] * len(shape)
         b_ax = 1  # [L, B, ...] layout everywhere
-        if len(shape) < 2:
-            return P()
         if shape[b_ax] % bsize == 0 and shape[b_ax] >= bsize:
             spec[b_ax] = baxes
         elif shape[b_ax] % dsize == 0 and shape[b_ax] >= dsize:
             spec[b_ax] = "data"
-        # shard the largest remaining dim over model (heads / seq / feature)
-        order = sorted(range(2, len(shape)), key=lambda i: -shape[i])
+        if np.issubdtype(np.dtype(leaf.dtype), np.integer):
+            return P(*spec)
+        order = (sorted(range(3, len(shape)), key=lambda i: -shape[i])
+                 + ([2] if len(shape) > 2 else []))
         mi = next((i for i in order if shape[i] % msize == 0 and shape[i] >= msize), None)
         if mi is not None:
             spec[mi] = "model"

@@ -1,17 +1,25 @@
-"""Serving driver: batched generation with optional LCC compression.
+"""Serving driver: scheduler-driven batched generation with optional LCC
+compression, multi-device sharding and token streaming.
 
     PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --reduced \
-        --requests 6 --compress
+        --requests 6 --compress --stream
+
+    # 2-way tensor parallel on a multi-device host (e.g. under
+    # XLA_FLAGS=--xla_force_host_platform_device_count=2)
+    PYTHONPATH=src python -m repro.launch.serve --reduced --tp 2
 """
 import argparse
+import time
 
 import jax
 
 import repro.core as core
+from repro import compat
 from repro.configs import get_arch, reduced_config
 from repro.data.synthetic import MarkovLM
 from repro.models import api
 from repro.serving.engine import ServingEngine, compress_ffn_for_serving
+from repro.serving.scheduler import Scheduler
 
 
 def compress_ffn(params, cfg, max_share_rel_err=0.06):
@@ -24,6 +32,17 @@ def compress_ffn(params, cfg, max_share_rel_err=0.06):
     return params_c, report
 
 
+def build_mesh(dp: int, tp: int):
+    """("data", "model") mesh over the host's devices, or None for 1x1."""
+    if dp * tp <= 1:
+        return None
+    if dp * tp > jax.device_count():
+        raise SystemExit(f"--dp {dp} x --tp {tp} needs {dp * tp} devices, "
+                         f"host has {jax.device_count()} "
+                         "(set XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    return compat.make_mesh((dp, tp), ("data", "model"))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
@@ -33,6 +52,10 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--compress", action="store_true")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--dp", type=int, default=1, help="data-parallel mesh axis")
+    ap.add_argument("--tp", type=int, default=1, help="tensor-parallel mesh axis")
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they are sampled")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -49,17 +72,28 @@ def main() -> None:
     prompts = [lm.sample(1, 8, seed=100 + i)[0, :8].tolist()
                for i in range(args.requests)]
     eng = ServingEngine(params, cfg, n_slots=args.slots, max_len=128,
-                        temperature=args.temperature)
-    import time
+                        temperature=args.temperature,
+                        mesh=build_mesh(args.dp, args.tp))
+    sched = Scheduler(eng)
+    on_token = ((lambda rid, tok: print(f"  req{rid} += {tok}", flush=True))
+                if args.stream else None)
     t0 = time.time()
-    res = eng.generate(prompts, max_new_tokens=args.max_new)
+    rids = [sched.enqueue(p, max_new=args.max_new,
+                          priority=args.requests - i,  # earlier = higher
+                          on_token=on_token)
+            for i, p in enumerate(prompts)]
+    sched.run()
     dt = time.time() - t0
+    res = [sched.take_result(r) for r in rids]
     tok = sum(len(r.tokens) - r.prompt_len for r in res)
     for i, r in enumerate(res):
+        tag = f" [error: {r.error}]" if r.error else ""
         print(f"req{i}: prompt={r.tokens[:r.prompt_len]} -> "
-              f"{r.tokens[r.prompt_len:]}")
+              f"{r.tokens[r.prompt_len:]}{tag}")
+    where = (f"mesh {args.dp}x{args.tp}" if args.dp * args.tp > 1
+             else jax.default_backend())
     print(f"{tok} tokens in {dt:.1f}s ({tok / dt:.1f} tok/s, "
-          f"{args.slots} slots, CPU interpret)")
+          f"{args.slots} slots, {eng.step_dispatches} dispatches, {where})")
 
 
 if __name__ == "__main__":

@@ -21,7 +21,7 @@ from repro.configs.base import ArchConfig, ShapeCell
 from . import transformer, whisper
 
 __all__ = ["init_params", "abstract_params", "train_loss", "prefill", "decode",
-           "init_decode_state", "abstract_decode_state",
+           "init_decode_state", "abstract_decode_state", "sample_tokens",
            "family_of", "register_compress_adapter", "compressible_units",
            "rebind", "compress_model"]
 
@@ -67,6 +67,21 @@ def decode(params, cfg: ArchConfig, state, token, pos, *, unroll: bool = False,
         return whisper.decode_step(params, cfg, state, token, pos, unroll=unroll)
     return transformer.decode_step(params, cfg, state, token, pos, unroll=unroll,
                                    matvec_overrides=matvec_overrides)
+
+
+def sample_tokens(logits, keys, temperature):
+    """Device-side per-row sampling: logits [B, V], keys [B, 2] (one PRNG key
+    per row), temperature [B].  Rows with temperature <= 0 take the argmax;
+    the rest draw from ``softmax(logits / temperature)`` under their own key,
+    so draws are independent of batch composition and row order.  Traceable —
+    serving fuses this into the jitted decode step."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def one(k, row, t):
+        return jax.random.categorical(k, row / jnp.maximum(t, 1e-6))
+
+    sampled = jax.vmap(one)(keys, logits, temperature).astype(jnp.int32)
+    return jnp.where(temperature > 0.0, sampled, greedy)
 
 
 def init_decode_state(cfg: ArchConfig, batch: int, smax: int):

@@ -188,7 +188,9 @@ def attention_decode(
         elif mrope_sections is not None:
             k_new = apply_mrope(k_new, mrope_positions, mrope_sections)
         smax = cache.k.shape[1]
-        slot = pos % smax if window is not None else pos
+        # negative pos (serving's inactive-slot sentinel) must stay out of the
+        # ring too: plain pos would wrap -1 % smax onto a live cache entry
+        slot = jnp.where(pos >= 0, pos % smax, -1) if window is not None else pos
         onehot = jax.nn.one_hot(slot, smax, dtype=cache.k.dtype)  # [B, Smax]
         k = cache.k * (1 - onehot)[..., None, None] + onehot[..., None, None] * k_new
         v = cache.v * (1 - onehot)[..., None, None] + onehot[..., None, None] * v_new

@@ -2,8 +2,23 @@
 
 The engine keeps a fixed decode batch of ``n_slots``; finished sequences free
 their slot and queued requests are prefilled into it (one bulk ``api.prefill``
-writes the slot's KV cache in a single forward).  Greedy or temperature
-sampling.  Works for every decode-capable family through models.api.
+writes the slot's KV cache in a single forward).  Decoding is **device-side**:
+one jitted dispatch per step fuses the forward pass, greedy/temperature
+sampling (per-slot PRNG keys, so draws are independent of slot order and of
+which other requests are in flight), position/budget bookkeeping and the
+EOS/headroom ``done`` flags — the host receives a single small packed array
+(sampled token + emit/done masks) per step instead of round-tripping logits.
+
+Multi-device serving: pass ``mesh=`` and the engine places params with
+:func:`repro.distributed.sharding.params_pspecs` (tensor-parallel on the
+"model" axis where divisible, FSDP on "data" otherwise) and the KV/decode
+state with :func:`~repro.distributed.sharding.decode_state_pspecs` (slots over
+the batch axes), then jits the fused step with explicit in/out shardings so
+every step runs partitioned without resharding-triggered recompiles.
+
+Scheduling (queues, priorities, admission, streaming callbacks, failed-request
+isolation) lives in :class:`repro.serving.scheduler.Scheduler`; ``generate()``
+is a thin convenience wrapper over it.
 
 Compressed serving is first-class and artifact-driven: compress offline with
 ``models.api.compress_model``, save the :class:`~repro.core.artifact.
@@ -23,11 +38,13 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.models import api
 
-__all__ = ["ServingEngine", "GenerationResult", "LCCMatvec",
+__all__ = ["ServingEngine", "GenerationResult", "StepEvent", "LCCMatvec",
            "compress_ffn_for_serving"]
 
 
@@ -36,20 +53,31 @@ class GenerationResult:
     tokens: list[int]
     prompt_len: int
     finished: bool
+    error: str | None = None
+
+
+@dataclass(frozen=True)
+class StepEvent:
+    """One slot's outcome of a decode step: ``token is None`` means the slot
+    finished without emitting (no decode headroom)."""
+    rid: int
+    token: int | None
+    finished: bool
 
 
 class ServingEngine:
     """``ServingEngine(params, cfg)`` serves raw weights; ``ServingEngine(
     artifact=compressed_model)`` serves a compression artifact (params and
     config come from the artifact, and FFN projections of dense-FFN families
-    run on the fused LCC kernel path unless ``use_kernel=False``)."""
+    run on the fused LCC kernel path unless ``use_kernel=False``).  Pass
+    ``mesh=`` for sharded multi-device decode."""
 
     def __init__(self, params=None, cfg: ArchConfig | None = None, *,
                  artifact=None, n_slots: int = 8,
                  max_len: int = 512, eos_id: int | None = None,
                  temperature: float = 0.0, seed: int = 0,
                  use_kernel: bool = True, bulk_prefill: bool = True,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None, mesh=None):
         if artifact is not None:
             if cfg is None:
                 cfg = artifact.config
@@ -62,16 +90,27 @@ class ServingEngine:
         self.artifact = artifact
         self.n_slots = n_slots
         self.max_len = max_len
-        # per-request decode budget; generate() overrides it per call, but a
-        # standalone submit()/step() loop must find it initialized
+        # default per-request decode budget (submit()/Scheduler may override
+        # per request); bounded by max_len anyway
         self.max_new = max_len
         self.eos = eos_id
         self.temp = temperature
         self.bulk_prefill = bulk_prefill
-        self.key = jax.random.PRNGKey(seed)
+        self.mesh = mesh
+        self._base_key = jax.random.PRNGKey(seed)
         self.state = api.init_decode_state(cfg, n_slots, max_len)
+        # host mirrors of the device-side per-slot control state
         self.pos = np.zeros(n_slots, np.int64)
         self.active = np.zeros(n_slots, bool)
+        self._last_tok = np.zeros(n_slots, np.int32)
+        self._new_count = np.zeros(n_slots, np.int32)
+        self._max_new_arr = np.full(n_slots, self.max_new, np.int32)
+        self._temp_arr = np.full(n_slots, temperature, np.float32)
+        self._keys = np.array(
+            jax.random.split(self._base_key, n_slots), np.uint32)
+        self._ctrl_dev = None  # device copies of the submit-time-only arrays
+        self._slot_dev = None  # device (last_tok, pos, active, new_count),
+        # carried across steps; None => re-upload from the host mirrors
         self.results: dict[int, GenerationResult] = {}
         self.slot_req: dict[int, int] = {}
         self._next_req = 0
@@ -82,6 +121,8 @@ class ServingEngine:
         self._decode = jax.jit(
             lambda p, s, t, pos: api.decode(p, cfg, s, t, pos,
                                             matvec_overrides=ov))
+        self.step_dispatches = 0  # jitted fused-step invocations (observability)
+        self._step_fn = self._build_step_fn()
 
     @staticmethod
     def _build_overrides(artifact, interpret):
@@ -106,14 +147,77 @@ class ServingEngine:
                 ov[proj] = fns
         return ov or None
 
+    # ---------------------------------------------------------- fused step
+    def _build_step_fn(self):
+        """Jit the whole decode step — forward, sampling, bookkeeping — so
+        ``step()`` costs one dispatch and one small device->host transfer."""
+        cfg, ov, max_len = self.cfg, self.matvec_overrides, self.max_len
+
+        def fused(params, state, last_tok, pos, active, new_count,
+                  max_new, temps, keys, eos):
+            # a slot emits only with cache headroom AND budget left (the
+            # pre-check makes max_new <= 0 finish without sampling)
+            can_emit = (pos < max_len) & (new_count < max_new)
+            emit = active & can_emit
+            # non-emitting slots feed position -1: one_hot(-1) writes nothing
+            # (attention_decode keeps negative positions out of ring caches
+            # too), so free/finished slots never scribble on their cache
+            toks = jnp.where(emit, last_tok, 0)[:, None]
+            dpos = jnp.where(emit, pos - 1, -1).astype(jnp.int32)
+            logits, new_state = api.decode(params, cfg, state, toks, dpos,
+                                           matvec_overrides=ov)
+            sub = jax.vmap(jax.random.fold_in)(keys, new_count)
+            nxt = api.sample_tokens(logits.astype(jnp.float32), sub, temps)
+            nxt = jnp.where(emit, nxt, last_tok)
+            pos2 = pos + emit
+            count2 = new_count + emit
+            done = emit & (((eos >= 0) & (nxt == eos))
+                           | (count2 >= max_new) | (pos2 >= max_len))
+            done = done | (active & ~can_emit)
+            packed = jnp.stack([nxt.astype(jnp.int32), emit.astype(jnp.int32),
+                                done.astype(jnp.int32)])
+            # carried device ctrl state: mirrors exactly the host-side updates
+            # in step(), so the next step needs no H2D re-upload of it
+            ctrl = (nxt, pos2, active & ~done, count2)  # nxt already carries
+            # last_tok for non-emitting rows
+            return new_state, packed, ctrl
+
+        if self.mesh is None:
+            return jax.jit(fused)
+        from repro.distributed import sharding as shd
+
+        self._param_sh = shd.named(self.mesh, shd.params_pspecs(self.params, self.mesh))
+        self._state_sh = shd.named(self.mesh, shd.decode_state_pspecs(self.state, self.mesh))
+        self.params = jax.device_put(self.params, self._param_sh)
+        self.state = jax.device_put(self.state, self._state_sh)
+        rep = NamedSharding(self.mesh, P())
+        # explicit shardings: prefill-time state surgery can't change the step
+        # signature, so the step never re-traces on a sharding flip
+        return jax.jit(fused,
+                       in_shardings=(self._param_sh, self._state_sh) + (rep,) * 8,
+                       out_shardings=(self._state_sh, rep, (rep,) * 4))
+
     # ------------------------------------------------------------------ API
-    def submit(self, prompt: list[int]) -> int:
-        """Prefill a prompt into a free slot; returns request id."""
+    def validate_prompt(self, prompt: list[int]) -> str | None:
+        """Why a prompt cannot be served (None when it can).  Single source of
+        truth for ``submit()`` (raises) and the scheduler (errored result)."""
         if not prompt:
-            raise ValueError("empty prompt: decode needs at least one token")
+            return "empty prompt: decode needs at least one token"
         if len(prompt) > self.max_len:
-            raise ValueError(f"prompt of {len(prompt)} tokens exceeds the "
-                             f"engine's max_len={self.max_len} KV cache")
+            return (f"prompt of {len(prompt)} tokens exceeds the engine's "
+                    f"max_len={self.max_len} KV cache")
+        return None
+
+    def submit(self, prompt: list[int], *, max_new: int | None = None,
+               temperature: float | None = None) -> int:
+        """Prefill a prompt into a free slot; returns request id.
+
+        ``max_new`` / ``temperature`` override the engine defaults for this
+        request only (the per-slot budget/temp arrays feed the fused step).
+        """
+        err = self.validate_prompt(prompt)
+        if err is not None:
+            raise ValueError(err)
         free = np.where(~self.active)[0]
         if free.size == 0:
             raise RuntimeError("no free slots; call step() until one finishes")
@@ -121,30 +225,64 @@ class ServingEngine:
         rid = self._next_req
         self._next_req += 1
         if self.bulk_prefill and ("k" in self.state or "c_kv" in self.state):
-            # one bulk forward writes the whole slot cache (and resets stale
-            # kpos entries from the slot's previous occupant)
+            # one bulk forward writes the whole slot cache (and rewrites the
+            # full kpos row, so stale entries need no separate reset)
             self._prefill_slot(slot, prompt)
         else:
             # stateful families (ssm/hybrid) keep the tokenwise path: their
             # per-layer recurrent states live in scan-stacked layouts that a
-            # bulk forward does not expose per-slot
+            # bulk forward does not expose per-slot; the slot column is reset
+            # first so the previous occupant's state/kpos never leaks
+            self._reset_slot_state(slot)
             self._prefill_slot_tokenwise(slot, prompt)
         self.pos[slot] = len(prompt)
         self.active[slot] = True
+        self._last_tok[slot] = prompt[-1]
+        self._new_count[slot] = 0
+        self._max_new_arr[slot] = self.max_new if max_new is None else max_new
+        self._temp_arr[slot] = self.temp if temperature is None else temperature
+        # request-keyed PRNG: draws depend on (seed, rid, step), never on which
+        # slot the request landed in or what else is in flight
+        self._keys[slot] = np.asarray(
+            jax.random.fold_in(self._base_key, rid), np.uint32)
+        self._ctrl_dev = None  # budget/temp/key arrays changed: re-upload once
+        self._slot_dev = None  # host mirrors mutated: re-upload once
         self.slot_req[slot] = rid
         self.results[rid] = GenerationResult(tokens=list(prompt),
                                              prompt_len=len(prompt), finished=False)
         return rid
 
     # -------------------------------------------------------------- prefill
+    def _reset_slot_state(self, slot: int) -> None:
+        """Clear one slot's column of every decode-state leaf (kpos-style
+        position maps to -1, caches/recurrent states to 0) so a reused slot
+        never sees its previous occupant's KV entries or SSM state."""
+        st = dict(self.state)
+        for name, v in st.items():
+            if name.startswith("cross_"):
+                continue  # whisper cross-KV is set per slot by the caller
+            fill = -1 if "kpos" in name else 0
+            st[name] = v.at[:, slot].set(jnp.asarray(fill, v.dtype))
+        self.state = st
+
+    def _merge_slot_state(self, old, new, slot: int):
+        """Take ``new``'s batch column ``slot``, keep ``old`` elsewhere — the
+        tokenwise prefill must not advance other slots' recurrent state."""
+        return jax.tree.map(lambda o, n: o.at[:, slot].set(n[:, slot]),
+                            old, new)
+
     def _prefill_slot_tokenwise(self, slot: int, prompt: list[int]) -> None:
         """Legacy prefill: one decode step per prompt token (kept as the
         fallback for recurrent-state families and as the bulk path's
-        equivalence/latency baseline in benchmarks)."""
+        equivalence/latency baseline in benchmarks).  Decode rows are
+        independent, so the loop runs on a scratch state and only the target
+        slot's column is merged back — other slots never see the prefill."""
+        old = scratch = self.state
         for t, tok in enumerate(prompt):
-            _logits, self.state = self._decode(
-                self.params, self.state,
+            _logits, scratch = self._decode(
+                self.params, scratch,
                 self._token_batch(slot, tok), self._pos_batch(slot, t))
+        self.state = self._merge_slot_state(old, scratch, slot)
 
     def _prefill_slot(self, slot: int, prompt: list[int]) -> None:
         """Bulk prefill: ONE ``api.prefill`` forward over the prompt writes
@@ -186,50 +324,74 @@ class ServingEngine:
         st["kpos"] = st["kpos"].at[:, slot].set(jnp.asarray(kpos_row, jnp.int32))
         self.state = st
 
-    def step(self) -> None:
-        """One decode step for every active slot."""
+    def cancel(self, rid: int) -> bool:
+        """Stop an in-flight request (its slot frees on the spot); returns
+        whether anything was cancelled.  The result keeps the tokens sampled
+        so far and is marked finished."""
+        for slot, r in self.slot_req.items():
+            if r == rid and self.active[slot]:
+                self.active[slot] = False
+                self._slot_dev = None  # host mirrors mutated: re-upload once
+                self.results[rid].finished = True
+                return True
+        return False
+
+    def step(self) -> list[StepEvent]:
+        """One fused decode step for every active slot: exactly one jitted
+        dispatch; the only device->host traffic is the packed [3, n_slots]
+        (token, emit, done) array.  Returns this step's per-slot events."""
+        events: list[StepEvent] = []
         if not self.active.any():
-            return
-        toks = np.zeros((self.n_slots, 1), np.int32)
+            return events
+        eos = np.int32(-1 if self.eos is None else self.eos)
+        if self._ctrl_dev is None:  # max_new/temps/keys only change at submit
+            self._ctrl_dev = (jnp.asarray(self._max_new_arr),
+                              jnp.asarray(self._temp_arr),
+                              jnp.asarray(self._keys))
+        max_new_d, temps_d, keys_d = self._ctrl_dev
+        if self._slot_dev is None:  # first step after a host-side mutation
+            self._slot_dev = (
+                jnp.asarray(self._last_tok), jnp.asarray(self.pos, jnp.int32),
+                jnp.asarray(self.active), jnp.asarray(self._new_count))
+        new_state, packed, self._slot_dev = self._step_fn(
+            self.params, self.state, *self._slot_dev,
+            max_new_d, temps_d, keys_d, eos)
+        self.step_dispatches += 1
+        self.state = new_state
+        nxt, emit, done = np.asarray(packed)  # the one small host transfer
         for slot in np.where(self.active)[0]:
             rid = self.slot_req[slot]
-            toks[slot, 0] = self.results[rid].tokens[-1]
-        logits, self.state = self._decode(self.params, self.state,
-                                          jnp.asarray(toks),
-                                          jnp.asarray(self.pos - 1, jnp.int32))
-        logits = np.asarray(logits, np.float32)
-        for slot in np.where(self.active)[0]:
-            rid = self.slot_req[slot]
-            nxt = self._sample(logits[slot])
             r = self.results[rid]
-            r.tokens.append(int(nxt))
-            self.pos[slot] += 1
-            done = (self.eos is not None and nxt == self.eos) or \
-                (len(r.tokens) - r.prompt_len >= self.max_new) or \
-                (self.pos[slot] >= self.max_len)
-            if done:
+            tok: int | None = None
+            if emit[slot]:
+                tok = int(nxt[slot])
+                r.tokens.append(tok)
+                self._last_tok[slot] = tok
+                self.pos[slot] += 1
+                self._new_count[slot] += 1
+            if done[slot]:
                 r.finished = True
                 self.active[slot] = False
+            events.append(StepEvent(rid=rid, token=tok, finished=bool(done[slot])))
+        return events
 
-    def generate(self, prompts: list[list[int]], max_new_tokens: int = 32
+    def generate(self, prompts: list[list[int]], max_new_tokens: int = 32, *,
+                 temperature: float | None = None, on_token=None
                  ) -> list[GenerationResult]:
-        """Continuous-batched generation over a request list."""
-        prev_max_new = self.max_new  # restored below: the per-call budget must
-        self.max_new = max_new_tokens  # not leak into later standalone loops
-        queue = list(enumerate(prompts))
-        rid_map = {}
-        try:
-            while queue or self.active.any():
-                while queue and (~self.active).any():
-                    i, prompt = queue.pop(0)
-                    rid_map[self.submit(prompt)] = i
-                self.step()
-        finally:
-            self.max_new = prev_max_new
-        out: list[GenerationResult | None] = [None] * len(prompts)
-        for rid, i in rid_map.items():
-            out[i] = self.results[rid]
-        return out  # type: ignore[return-value]
+        """Continuous-batched generation over a request list (Scheduler-driven).
+
+        Invalid prompts (empty / beyond the KV cache) do not abort the batch:
+        they come back as ``GenerationResult(finished=True, error=...)`` while
+        the rest of the batch completes.  ``on_token(rid, token)`` streams
+        tokens as they are sampled.
+        """
+        from .scheduler import Scheduler
+
+        sched = Scheduler(self)
+        rids = [sched.enqueue(p, max_new=max_new_tokens, temperature=temperature,
+                              on_token=on_token) for p in prompts]
+        sched.run()
+        return [sched.take_result(r) for r in rids]
 
     # -------------------------------------------------------------- helpers
     def _token_batch(self, slot: int, tok: int):
@@ -241,12 +403,6 @@ class ServingEngine:
         p = np.asarray(self.pos - 1, np.int64).clip(0)
         p[slot] = pos
         return jnp.asarray(p, jnp.int32)
-
-    def _sample(self, logits: np.ndarray) -> int:
-        if self.temp <= 0:
-            return int(np.argmax(logits))
-        self.key, k = jax.random.split(self.key)
-        return int(jax.random.categorical(k, jnp.asarray(logits) / self.temp))
 
 
 # ---------------------------------------------------------------- compression
@@ -260,6 +416,10 @@ class LCCMatvec:
     launch.  Built from a ``core.compress.CompressedDense`` record; pass
     ``packed=`` to reuse an artifact's pre-packed kernel buffers instead of
     re-packing the decomposition.
+
+    ``B`` is bucketed to powers of two (pad + slice), so serving many distinct
+    decode/prefill batch widths compiles at most log2 variants of the fused
+    chain instead of one per width.
     """
 
     def __init__(self, cd, *, packed=None, block: int = 128,
@@ -289,9 +449,15 @@ class LCCMatvec:
                                               interpret=self.interpret)
 
     def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
-        if x.ndim == 1:
-            return self._fn(x[:, None])[:, 0]
-        return self._fn(x)
+        vec = x.ndim == 1
+        if vec:
+            x = x[:, None]
+        b = x.shape[1]
+        b_pad = 1 << (b - 1).bit_length()  # next power of two (b=1 -> 1)
+        if b_pad != b:
+            x = jnp.pad(x, ((0, 0), (0, b_pad - b)))
+        y = self._fn(x)
+        return y[:, 0] if vec else y[:, :b]
 
 
 def compress_ffn_for_serving(params, cfg: ArchConfig, compression=None, *,

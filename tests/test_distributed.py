@@ -187,6 +187,44 @@ def test_overlapped_ag_matmul_subprocess():
     assert "OK" in out
 
 
+def test_sharded_serving_decode_subprocess():
+    """ServingEngine(mesh=...) on a 2-device CPU mesh: decode-state sharded
+    over slots (data) or params tensor-parallel (model), generated tokens
+    identical to the single-device engine and logits within 1e-4."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
+        from repro.configs import get_arch, reduced_config
+        from repro.models import api
+        from repro.serving.engine import ServingEngine
+        assert jax.device_count() == 2
+        cfg = reduced_config(get_arch("olmo-1b"))
+        params = api.init_params(jax.random.PRNGKey(0), cfg)
+        prompts = [[5, 9, 2], [7, 1], [4, 4, 4, 8], [30]]
+        ref = ServingEngine(params, cfg, n_slots=4, max_len=64)
+        r_ref = ref.generate(prompts, max_new_tokens=6)
+
+        tok = jnp.asarray([[3], [1], [2], [7]], jnp.int32)
+        pos = jnp.asarray([2, 1, 3, 0], jnp.int32)
+        st0 = api.init_decode_state(cfg, 4, 64)
+        l_ref, _ = ref._decode(ref.params, st0, tok, pos)
+
+        for axes in (("data", "model"), ("model", "data")):
+            mesh = compat.make_mesh((2, 1), axes)
+            eng = ServingEngine(params, cfg, n_slots=4, max_len=64, mesh=mesh)
+            r = eng.generate(prompts, max_new_tokens=6)
+            assert [x.tokens for x in r] == [x.tokens for x in r_ref], axes
+            st = jax.device_put(st0, eng._state_sh)
+            l_sh, _ = eng._decode(eng.params, st, tok, pos)
+            d = float(jnp.abs(l_ref.astype(jnp.float32)
+                              - l_sh.astype(jnp.float32)).max())
+            assert d <= 1e-4, (axes, d)
+            print("mesh", axes[0], "max_diff", d)
+        print("OK")
+    """, devices=2)
+    assert "OK" in out
+
+
 def test_elastic_remesh_reshard_subprocess():
     """Simulated pod loss: save, rebuild smaller mesh, reshard, keep training."""
     out = _run_subprocess("""

@@ -1,4 +1,7 @@
-"""Serving engine (continuous batching) + synthetic data generators."""
+"""Serving engine (continuous batching, device-side fused step), the async
+scheduler, and synthetic data generators."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,6 +11,13 @@ from repro.configs import get_arch, reduced_config
 from repro.data.synthetic import MarkovLM, batches, digits_like, textures_like
 from repro.models import api
 from repro.serving.engine import ServingEngine
+from repro.serving.scheduler import Scheduler
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = reduced_config(get_arch("olmo-1b"))
+    return cfg, api.init_params(jax.random.PRNGKey(0), cfg)
 
 
 def test_markov_determinism_and_entropy():
@@ -116,3 +126,203 @@ def test_serving_rejects_prompt_beyond_kv_cache():
     rid = eng.submit([1, 2, 3, 4])  # exactly max_len still fits
     eng.step()
     assert eng.results[rid].finished
+
+
+def test_full_prompt_has_no_decode_headroom(dense_model):
+    """A slot prefilled with len(prompt) == max_len finishes without emitting:
+    a generated token would sit at position max_len, past the KV cache."""
+    cfg, params = dense_model
+    eng = ServingEngine(params, cfg, n_slots=1, max_len=4)
+    rid = eng.submit([1, 2, 3, 4])
+    events = eng.step()
+    assert eng.results[rid].finished
+    assert eng.results[rid].tokens == [1, 2, 3, 4]  # nothing past the cache
+    assert events == [type(events[0])(rid=rid, token=None, finished=True)]
+
+
+def test_zero_budget_finishes_without_emitting(dense_model):
+    """max_new=0 must not sample: the budget is pre-checked before emit."""
+    cfg, params = dense_model
+    eng = ServingEngine(params, cfg, n_slots=1, max_len=16)
+    rid = eng.submit([1, 2], max_new=0)
+    eng.step()
+    assert eng.results[rid].finished
+    assert eng.results[rid].tokens == [1, 2]
+
+
+# ------------------------------------------------------- device-side stepping
+
+
+def test_step_is_one_dispatch_with_device_sampling(dense_model):
+    """step() performs exactly one jitted dispatch, and the on-device argmax
+    matches host argmax over the raw decode logits (temp-0 parity)."""
+    cfg, params = dense_model
+    eng = ServingEngine(params, cfg, n_slots=2, max_len=32)
+    rid = eng.submit([3, 1, 4])
+    before = eng.step_dispatches
+    # host reference: raw logits for the token step() is about to feed
+    logits, _ = eng._decode(eng.params, eng.state,
+                            jnp.asarray([[4], [0]], jnp.int32),
+                            jnp.asarray([2, -1], jnp.int32))
+    host_next = int(np.argmax(np.asarray(logits[0], np.float32)))
+    events = eng.step()
+    assert eng.step_dispatches == before + 1
+    assert events[0].token == host_next == eng.results[rid].tokens[-1]
+    for _ in range(3):
+        before = eng.step_dispatches
+        eng.step()
+        assert eng.step_dispatches == before + 1
+
+
+def test_temperature_sampling_slot_order_independent(dense_model):
+    """Per-slot request-keyed PRNG: a request's draws depend only on the seed
+    and its request id, not on batch composition or slot placement."""
+    cfg, params = dense_model
+    a = ServingEngine(params, cfg, n_slots=2, max_len=64, temperature=0.8, seed=7)
+    ra = a.generate([[5, 9, 2], [7, 1]], max_new_tokens=5)
+    b = ServingEngine(params, cfg, n_slots=4, max_len=64, temperature=0.8, seed=7)
+    rb = b.generate([[5, 9, 2], [7, 1], [4, 4]], max_new_tokens=5)
+    assert [r.tokens for r in ra] == [r.tokens for r in rb][:2]
+
+
+def test_generate_survives_invalid_prompts(dense_model):
+    """One empty / overlong prompt must not abort the batch: it resolves to a
+    finished errored result while the valid requests complete."""
+    cfg, params = dense_model
+    eng = ServingEngine(params, cfg, n_slots=2, max_len=16)
+    res = eng.generate([[1, 2], [], list(range(100)), [4, 5]], max_new_tokens=3)
+    assert [r.error is None for r in res] == [True, False, False, True]
+    assert all(r.finished for r in res)
+    assert "empty prompt" in res[1].error and "max_len" in res[2].error
+    assert len(res[0].tokens) == 2 + 3 and len(res[3].tokens) == 2 + 3
+
+
+# ---------------------------------------------------------------- slot reuse
+
+
+def test_windowed_slot_reuse_kpos_reset(dense_model):
+    """Ring-cache (windowed attention) slot reuse: the next request must not
+    see the previous occupant's kpos/KV entries."""
+    cfg, params = dense_model
+    cfg_w = dataclasses.replace(cfg, attn_window=8)
+    prompts = [[5, 9, 2, 7], [1, 2, 3], [8, 8]]
+    eng = ServingEngine(params, cfg_w, n_slots=1, max_len=16)
+    res = eng.generate(prompts, max_new_tokens=4)  # sequential reuse of slot 0
+    for i, p in enumerate(prompts):
+        fresh = ServingEngine(params, cfg_w, n_slots=1, max_len=16)
+        assert fresh.generate([p], max_new_tokens=4)[0].tokens == res[i].tokens, i
+
+
+def test_recurrent_state_slot_isolation():
+    """SSM families: prefilling one slot must not advance other slots'
+    recurrent state, and slot reuse resets it."""
+    cfg = reduced_config(get_arch("rwkv6-1.6b"))
+    params = api.init_params(jax.random.PRNGKey(1), cfg)
+    prompts = [[5, 9, 2], [1, 2]]
+    seq = ServingEngine(params, cfg, n_slots=1, max_len=16)
+    r_seq = seq.generate(prompts, max_new_tokens=3)  # reuse
+    par = ServingEngine(params, cfg, n_slots=2, max_len=16)
+    r_par = par.generate(prompts, max_new_tokens=3)  # concurrent
+    for i, p in enumerate(prompts):
+        fresh = ServingEngine(params, cfg, n_slots=1, max_len=16)
+        want = fresh.generate([p], max_new_tokens=3)[0].tokens
+        assert r_seq[i].tokens == want and r_par[i].tokens == want, i
+
+
+# ----------------------------------------------------------------- scheduler
+
+
+def test_scheduler_priority_order(dense_model):
+    """With one slot, admission follows priority (FIFO within a class)."""
+    cfg, params = dense_model
+    eng = ServingEngine(params, cfg, n_slots=1, max_len=32)
+    sched = Scheduler(eng)
+    order = []
+    cb = lambda rid, tok: order.append(rid) if order[-1:] != [rid] else None  # noqa: E731
+    r_low = sched.enqueue([1, 2], priority=0, max_new=2, on_token=cb)
+    r_hi = sched.enqueue([3, 4], priority=5, max_new=2, on_token=cb)
+    r_mid = sched.enqueue([5, 6], priority=2, max_new=2, on_token=cb)
+    sched.run()
+    assert order == [r_hi, r_mid, r_low]
+    assert all(sched.results[r].finished for r in (r_low, r_hi, r_mid))
+
+
+def test_scheduler_streaming_and_overrides(dense_model):
+    """Streaming callbacks see every sampled token in order, and per-request
+    max_new/temperature overrides apply."""
+    cfg, params = dense_model
+    eng = ServingEngine(params, cfg, n_slots=2, max_len=64)
+    sched = Scheduler(eng)
+    streamed: dict[int, list[int]] = {}
+    cb = lambda rid, tok: streamed.setdefault(rid, []).append(tok)  # noqa: E731
+    ra = sched.enqueue([5, 9, 2], max_new=4, on_token=cb)
+    rb = sched.enqueue([7, 1], max_new=2, temperature=0.9, on_token=cb)
+    sched.run()
+    res = sched.results
+    assert streamed[ra] == res[ra].tokens[3:] and len(streamed[ra]) == 4
+    assert streamed[rb] == res[rb].tokens[2:] and len(streamed[rb]) == 2
+    # temp override drew from the request-keyed PRNG, budget capped at 2
+    assert res[rb].finished
+
+
+def test_scheduler_survives_external_stepping(dense_model):
+    """run() must not hang when a tracked request's finishing step was driven
+    outside the scheduler (direct engine.step() / interleaved generate())."""
+    cfg, params = dense_model
+    eng = ServingEngine(params, cfg, n_slots=1, max_len=32)
+    sched = Scheduler(eng)
+    rid = sched.enqueue([1, 2], max_new=2)
+    sched.step()  # admit + first token
+    while eng.active.any():
+        eng.step()  # finished event consumed outside the scheduler
+    sched.run()  # retires via the aliased result; would previously spin
+    assert sched.results[rid].finished
+    assert len(sched.results[rid].tokens) == 4
+
+
+def test_scheduler_isolates_streaming_failure(dense_model):
+    """A raising on_token callback (broken streaming consumer) cancels only
+    its own request; the batch completes and engine-side results are evicted
+    on retire (bounded memory for long-running loops)."""
+    cfg, params = dense_model
+    eng = ServingEngine(params, cfg, n_slots=2, max_len=32)
+    sched = Scheduler(eng)
+
+    def bad(rid, tok):
+        raise BrokenPipeError("consumer gone")
+
+    rb = sched.enqueue([3, 4], max_new=4, on_token=bad)
+    ra = sched.enqueue([1, 2], max_new=4)
+    sched.run()
+    assert sched.results[rb].finished
+    assert "consumer gone" in sched.results[rb].error
+    assert len(sched.results[rb].tokens) == 3  # cancelled after token 1
+    assert sched.results[ra].error is None and len(sched.results[ra].tokens) == 6
+    assert not eng.results  # retired requests evicted from the engine
+
+
+def test_scheduler_isolates_failing_submission(dense_model):
+    """A request whose engine submission raises is errored out in place; the
+    queue keeps draining."""
+    cfg, params = dense_model
+    eng = ServingEngine(params, cfg, n_slots=1, max_len=32)
+    sched = Scheduler(eng)
+    boom = sched.enqueue([9, 9], max_new=2)
+    ok = sched.enqueue([1, 2], max_new=2)
+    orig = eng.submit
+    calls = {"n": 0}
+
+    def flaky(prompt, **kw):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("injected prefill failure")
+        return orig(prompt, **kw)
+
+    eng.submit = flaky
+    try:
+        sched.run()
+    finally:
+        eng.submit = orig
+    assert sched.results[boom].error == "injected prefill failure"
+    assert sched.results[boom].finished
+    assert sched.results[ok].error is None and len(sched.results[ok].tokens) == 4
