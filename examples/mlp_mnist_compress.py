@@ -1,17 +1,22 @@
 """Paper Sec. IV-A end to end: MLP-300 + Algorithm 1 (regularized training ->
-affinity-propagation weight sharing -> LCC), with compressed-accuracy checks.
+affinity-propagation weight sharing -> LCC) on the unified pipeline API, with
+compressed-accuracy checks via the serializable ``CompressedModel`` artifact.
 
-    PYTHONPATH=src python examples/mlp_mnist_compress.py [--lam 0.1] [--epochs 10]
+    PYTHONPATH=src python examples/mlp_mnist_compress.py [--lam 0.1] \
+        [--epochs 10] [--workers 2]
 """
 import argparse
+import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 import repro.core as core
+from repro.core.artifact import CompressedModel
 from repro.data.synthetic import batches, digits_like
-from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
+from repro.models import api
+from repro.models.mlp import MLPConfig, init_mlp, mlp_accuracy, mlp_loss
 from repro.optim.optimizers import prox_sgd, step_decay
 
 
@@ -21,12 +26,15 @@ def main() -> None:
     ap.add_argument("--epochs", type=int, default=10)
     ap.add_argument("--hidden", type=int, default=300)
     ap.add_argument("--algorithm", choices=["fp", "fs"], default="fs")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="pipeline worker processes")
     args = ap.parse_args()
 
     print("== 1. regularized training (ProxSGD, eq. (7)/(8)) ==")
+    cfg = MLPConfig(hidden=args.hidden)
     xs, ys = digits_like(2048, seed=0)
     xte, yte = digits_like(512, seed=1)
-    params = init_mlp(jax.random.PRNGKey(0), hidden=args.hidden)
+    params = init_mlp(jax.random.PRNGKey(0), hidden=cfg.hidden)
     opt = prox_sgd(momentum=0.9, prox_spec={"fc1/w": (args.lam, "columns")})
     state = opt.init(params)
     lr = step_decay(0.1, 0.95, 10)
@@ -39,22 +47,26 @@ def main() -> None:
     acc = float(mlp_accuracy(params, jnp.asarray(xte), jnp.asarray(yte)))
     w1 = np.asarray(params["fc1"]["w"], np.float64)
     kept = int((np.linalg.norm(w1, axis=0) > 1e-8).sum())
-    print(f"   accuracy {acc:.3f};  input neurons kept {kept}/784")
+    print(f"   accuracy {acc:.3f};  input neurons kept {kept}/{cfg.in_dim}")
 
-    print("== 2+3. weight sharing + LCC (Algorithm 1 steps 2-3) ==")
-    rep = core.ModelCostReport()
-    cd = core.compress_dense_matrix(
-        "fc1", w1, core.CompressionConfig(algorithm=args.algorithm), rep)
-    lc = rep.layers[0]
+    print("== 2+3. weight sharing + LCC via the parallel pipeline "
+          f"({args.workers} workers) ==")
+    art = api.compress_model(
+        params, cfg, core.CompressionConfig(algorithm=args.algorithm),
+        include="fc1", n_workers=args.workers)
+    lc = art.report.layers[0]
     print(f"   clusters: {lc.extra['clusters']}  achieved SNR: "
-          f"{lc.extra['achieved_snr_db']:.1f} dB")
-    print(rep.table())
+          f"{lc.extra['achieved_snr_db']:.1f} dB  "
+          f"({art.pipeline_stats['jobs']} slice jobs, "
+          f"{art.pipeline_stats['wall_s']}s)")
+    print(art.report.table())
 
-    eff = np.zeros_like(w1)
-    eff[:, cd.kept_columns] = cd.effective
-    fc1 = lambda x: x @ jnp.asarray(eff, jnp.float32).T  # noqa: E731
-    acc_c = float(mlp_accuracy(params, jnp.asarray(xte), jnp.asarray(yte),
-                               fc1_matvec=fc1))
+    print("== 4. artifact round-trip: compress once, evaluate from disk ==")
+    with tempfile.TemporaryDirectory() as d:
+        art.save(d)
+        art = CompressedModel.load(d)
+    # the artifact's params carry fc1's dense-effective map — drop-in forward
+    acc_c = float(mlp_accuracy(art.params, jnp.asarray(xte), jnp.asarray(yte)))
     print(f"== result: accuracy {acc:.3f} -> {acc_c:.3f} compressed; "
           f"adds ratio {lc.ratio('lcc'):.1f}x ==")
 

@@ -20,4 +20,12 @@ timeout 120 python benchmarks/bench_serving.py --smoke --out /tmp/BENCH_serving.
 python -c "import json; r = json.load(open('/tmp/BENCH_serving.json')); \
 assert r['results'] and all(x['decode_tok_s'] > 0 for x in r['results'])"
 
+echo "== compression pipeline bench smoke (120s budget) =="
+timeout 120 python benchmarks/bench_compress_pipeline.py --smoke \
+    --out /tmp/BENCH_compress.json
+python -c "import json, os; r = json.load(open('/tmp/BENCH_compress.json')); \
+assert r['results'] and all(x['wall_s'] > 0 for x in r['results']); \
+assert r['cache']['speedup'] > 1 and r['cache']['warm_hits'] == r['jobs']; \
+assert r['cpu_count'] < 4 or r['speedup_4v1'] > 1.0, r['speedup_4v1']"
+
 echo "CI OK"

@@ -157,6 +157,10 @@ def _config_from_manifest(kind: str, d: dict):
         d["stages"] = tuple(d["stages"])
         d["widths"] = tuple(d["widths"])
         return ResNetConfig(**d)
+    if kind == "MLPConfig":
+        from repro.models.mlp import MLPConfig
+
+        return MLPConfig(**d)
     raise ValueError(f"unknown config kind {kind!r} in artifact manifest")
 
 
@@ -167,12 +171,19 @@ def _config_from_manifest(kind: str, d: dict):
 
 @dataclass
 class CompressedModel:
-    config: Any  # ArchConfig | ResNetConfig
+    config: Any  # ArchConfig | ResNetConfig | MLPConfig
     params: Any  # dense-effective pytree
     records: dict[str, Any]  # unit name -> CompressedDense | conv dict
     packed: dict[str, Any] = field(default_factory=dict)  # name -> PackedDecomposition
     report: ModelCostReport = field(default_factory=ModelCostReport)
     compression: CompressionConfig = field(default_factory=CompressionConfig)
+    # per-unit plans (adds-budget allocator output); empty => ``compression``
+    # applied globally.  ``unit_config_for`` is the read surface.
+    unit_configs: dict[str, CompressionConfig] = field(default_factory=dict)
+    pipeline_stats: dict = field(default_factory=dict)  # workers/cache/wall
+
+    def unit_config_for(self, name: str) -> CompressionConfig:
+        return self.unit_configs.get(name, self.compression)
 
     @property
     def family(self) -> str:
@@ -240,6 +251,8 @@ class CompressedModel:
             "kind": kind,
             "config": cfg_dict,
             "compression": asdict(self.compression),
+            "unit_configs": {n: asdict(c) for n, c in self.unit_configs.items()},
+            "pipeline_stats": self.pipeline_stats,
             "report": _report_to_json(self.report),
             "units": man_units,
             "packed": man_packed,
@@ -327,6 +340,9 @@ class CompressedModel:
                 chain_lengths=tuple(pm["chain_lengths"]),
             )
         comp = CompressionConfig(**manifest["compression"])
+        unit_configs = {n: CompressionConfig(**d)
+                        for n, d in manifest.get("unit_configs", {}).items()}
         return cls(config=config, params=tree["params"], records=records,
                    packed=packed, report=_report_from_json(manifest["report"]),
-                   compression=comp)
+                   compression=comp, unit_configs=unit_configs,
+                   pipeline_stats=manifest.get("pipeline_stats", {}))

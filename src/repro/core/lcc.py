@@ -28,6 +28,10 @@ __all__ = [
     "FSProgram",
     "LCCDecomposition",
     "lcc_decompose",
+    "lcc_decompose_slice",
+    "plan_col_slices",
+    "resolve_target_snr_db",
+    "assemble_decomposition",
     "snr_db",
 ]
 
@@ -385,6 +389,72 @@ def _default_slice_width(n_rows: int) -> int:
     return int(np.clip(round(np.log2(max(n_rows, 2))), 2, 16))
 
 
+def resolve_target_snr_db(w: np.ndarray, target_snr_db: float | None,
+                          frac_bits: int) -> float:
+    """Concrete fidelity target for ``w``: the given dB figure, or (when None)
+    the SNR of ``frac_bits`` fixed-point CSD quantization of the same matrix,
+    so baseline and LCC models are compared at equal precision (paper Sec. IV).
+    Resolving this *before* slicing keeps per-slice jobs pure functions of
+    (slice matrix, knobs) — the pipeline's cache-key contract."""
+    if target_snr_db is None:
+        target_snr_db = quantization_snr_db(np.asarray(w, np.float64), frac_bits)
+        if not np.isfinite(target_snr_db):
+            target_snr_db = 6.02 * frac_bits + 10.0
+    return float(target_snr_db)
+
+
+def plan_col_slices(n_rows: int, n_cols: int,
+                    slice_width: int | None = None) -> list[tuple[int, int]]:
+    """The vertical slice grid of eq. (3): [(c0, c1), ...] covering n_cols."""
+    if slice_width is None:
+        slice_width = _default_slice_width(n_rows)
+    slice_width = max(1, min(slice_width, n_cols))
+    return [(c0, min(c0 + slice_width, n_cols))
+            for c0 in range(0, n_cols, slice_width)]
+
+
+def lcc_decompose_slice(
+    we: np.ndarray,
+    algorithm: str,
+    target_snr_db: float,
+    s_terms: int = 2,
+    max_factors: int = 24,
+    max_terms_per_row: int = 64,
+    exp_range: tuple[int, int] = _EXP_RANGE,
+) -> LCCChain | FSProgram:
+    """Decompose ONE tall column slice (the embarrassingly-parallel unit of
+    work: slices never interact until the final sum over slice outputs)."""
+    we = np.asarray(we, dtype=np.float64)
+    if algorithm == "fp":
+        return _fp_chain(we, s_terms, target_snr_db, max_factors, exp_range)
+    if algorithm == "fs":
+        return _fs_program(we, target_snr_db, max_terms_per_row, exp_range)
+    raise ValueError(f"unknown LCC algorithm {algorithm!r} (want 'fp' or 'fs')")
+
+
+def assemble_decomposition(
+    w: np.ndarray,
+    col_slices: list[tuple[int, int]],
+    pieces: list[LCCChain | FSProgram],
+    algorithm: str,
+    target_snr_db: float,
+    frac_bits: int = 8,
+) -> LCCDecomposition:
+    """Deterministic reduction: slice pieces (in column order) -> one
+    decomposition, with the meta fields ``lcc_decompose`` records."""
+    w = np.asarray(w, dtype=np.float64)
+    dec = LCCDecomposition(
+        shape=(w.shape[0], w.shape[1]),
+        col_slices=list(col_slices),
+        slices=list(pieces),
+        algorithm=algorithm,
+        target_snr_db=float(target_snr_db),
+    )
+    dec.meta["csd_adds_baseline"] = adds_csd_matrix(w, frac_bits)
+    dec.meta["achieved_snr_db"] = dec.achieved_snr_db(w)
+    return dec
+
+
 def lcc_decompose(
     w: np.ndarray,
     algorithm: str = "fp",
@@ -401,40 +471,25 @@ def lcc_decompose(
     If ``target_snr_db`` is None the fidelity target is matched to the SNR of
     ``frac_bits`` fixed-point CSD quantization of the same matrix, so that
     baseline and LCC models are compared at equal precision (paper Sec. IV).
+
+    This is the serial composition of the three pipeline stages
+    (:func:`plan_col_slices` -> :func:`lcc_decompose_slice` per slice ->
+    :func:`assemble_decomposition`); ``repro.pipeline`` runs the same stages
+    with the slice loop fanned out over worker processes, producing bitwise
+    identical results.
     """
     w = np.asarray(w, dtype=np.float64)
     if w.ndim != 2:
         raise ValueError(f"expected 2-D matrix, got {w.shape}")
     n, k = w.shape
-    if target_snr_db is None:
-        target_snr_db = quantization_snr_db(w, frac_bits)
-        if not np.isfinite(target_snr_db):
-            target_snr_db = 6.02 * frac_bits + 10.0
-    if slice_width is None:
-        slice_width = _default_slice_width(n)
-    slice_width = max(1, min(slice_width, k))
-
-    col_slices: list[tuple[int, int]] = []
-    pieces: list[LCCChain | FSProgram] = []
-    for c0 in range(0, k, slice_width):
-        c1 = min(c0 + slice_width, k)
-        we = w[:, c0:c1]
-        if algorithm == "fp":
-            piece: LCCChain | FSProgram = _fp_chain(we, s_terms, target_snr_db, max_factors, exp_range)
-        elif algorithm == "fs":
-            piece = _fs_program(we, target_snr_db, max_terms_per_row, exp_range)
-        else:
-            raise ValueError(f"unknown LCC algorithm {algorithm!r} (want 'fp' or 'fs')")
-        col_slices.append((c0, c1))
-        pieces.append(piece)
-
-    dec = LCCDecomposition(
-        shape=(n, k),
-        col_slices=col_slices,
-        slices=pieces,
-        algorithm=algorithm,
-        target_snr_db=float(target_snr_db),
-    )
-    dec.meta["csd_adds_baseline"] = adds_csd_matrix(w, frac_bits)
-    dec.meta["achieved_snr_db"] = dec.achieved_snr_db(w)
-    return dec
+    target_snr_db = resolve_target_snr_db(w, target_snr_db, frac_bits)
+    col_slices = plan_col_slices(n, k, slice_width)
+    pieces = [
+        lcc_decompose_slice(w[:, c0:c1], algorithm, target_snr_db,
+                            s_terms=s_terms, max_factors=max_factors,
+                            max_terms_per_row=max_terms_per_row,
+                            exp_range=exp_range)
+        for c0, c1 in col_slices
+    ]
+    return assemble_decomposition(w, col_slices, pieces, algorithm,
+                                  target_snr_db, frac_bits)

@@ -21,6 +21,7 @@ import numpy as np
 __all__ = [
     "affinity_propagation",
     "cluster_columns",
+    "cluster_columns_fixed",
     "SharedLayer",
     "shared_matvec",
     "centroid_grad_from_member_grads",
@@ -117,6 +118,55 @@ def cluster_columns(
     for i in range(c):
         centroids[:, i] = w[:, labels == i].mean(axis=1)
     return labels, centroids
+
+
+def cluster_columns_fixed(
+    w: np.ndarray,
+    n_clusters: int,
+    n_iter: int = 5,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Cluster columns into (at most) an *exact requested count* of clusters.
+
+    Affinity propagation picks its own cluster count; the adds-budget
+    allocator needs the count as a continuous dial between "a handful of
+    centroids" and "no sharing at all" (``n_clusters >= K``).  Deterministic:
+    farthest-point (k-center) seeding from the max-norm column + a few Lloyd
+    refinements, no RNG — so pipeline re-runs and resumed runs are bitwise
+    reproducible.  Returns (labels [K], centroids [N, C]); C can come out
+    below ``n_clusters`` when columns coincide or clusters empty out.
+    """
+    w = np.asarray(w, dtype=np.float64)
+    cols = w.T  # [K, N]
+    k = cols.shape[0]
+    c = max(1, min(int(n_clusters), k))
+    chosen = [int(np.argmax(np.sum(cols**2, axis=1)))]
+    d2 = np.sum((cols - cols[chosen[0]]) ** 2, axis=1)
+    while len(chosen) < c:
+        j = int(np.argmax(d2))
+        if d2[j] <= 0.0:
+            break  # duplicate columns: fewer distinct centers exist
+        chosen.append(j)
+        d2 = np.minimum(d2, np.sum((cols - cols[j]) ** 2, axis=1))
+    cents = cols[chosen].copy()  # [C, N]
+
+    def assign(cents):
+        # ||a-b||^2 via the matmul identity: [K, C] memory, never [K, C, N]
+        # (C can be ~K when the allocator dials toward the unshared end)
+        d = (np.sum(cols**2, axis=1)[:, None]
+             + np.sum(cents**2, axis=1)[None, :] - 2.0 * cols @ cents.T)
+        return np.argmin(d, axis=1)
+
+    for _ in range(n_iter):
+        labels = assign(cents)
+        for i in range(cents.shape[0]):
+            m = labels == i
+            if m.any():
+                cents[i] = cols[m].mean(axis=0)
+    labels = assign(cents)
+    used = np.unique(labels)  # drop empty clusters, relabel compactly
+    remap = np.zeros(cents.shape[0], dtype=np.int64)
+    remap[used] = np.arange(used.size)
+    return remap[labels].astype(np.int64), cents[used].T.copy()
 
 
 @dataclass

@@ -142,58 +142,70 @@ def rebind(params, cfg, name: str, effective):
 
 def compress_model(params, cfg, compression=None, *, include=None,
                    conv_channel_subsample=None, progress=None,
-                   build_packed: bool = True):
-    """Steps 2-3 of Algorithm 1 over every compressible unit of any family.
+                   build_packed: bool = True, n_workers: int = 1,
+                   budget_adds=None, cache_dir=None, run_dir=None,
+                   resume: bool = False):
+    """Steps 2-3 of Algorithm 1 over every compressible unit of any family,
+    executed by the :mod:`repro.pipeline` job graph.
 
     Returns a :class:`repro.core.artifact.CompressedModel`: per-unit
     compressed records, packed fused-kernel buffers (FP decompositions),
-    dense-effective params (drop-in for the stock XLA forward), and the
-    :class:`ModelCostReport`.  ``include`` filters unit names (callable or
-    prefix string); ``build_packed=False`` skips the kernel-buffer packing
-    when only the report/effective weights are wanted.
+    dense-effective params (drop-in for the stock XLA forward), the
+    :class:`ModelCostReport`, and — when the allocator ran — the chosen
+    per-unit plans.  ``include`` filters unit names (callable or prefix
+    string); ``build_packed=False`` skips the kernel-buffer packing when only
+    the report/effective weights are wanted.
+
+    Pipeline controls: ``n_workers`` fans slice jobs out over processes;
+    ``budget_adds`` invokes the adds-budget allocator (per-unit plans instead
+    of one global config); ``cache_dir`` enables the content-addressed slice
+    cache; ``run_dir``/``resume`` make the run restartable after a kill.
+    ``progress`` receives structured ``repro.pipeline.CompressionEvent``s.
     """
     import numpy as np
 
     from repro import core
     from repro.core.artifact import CompressedModel
     from repro.kernels import ops
+    from repro.pipeline import run_pipeline
 
     from . import compress_adapters
 
     if compression is None:
         compression = core.CompressionConfig(algorithm="fp", weight_sharing=True,
                                              max_share_rel_err=0.06)
-    report = core.ModelCostReport()
     sites = compress_adapters.sites_for(params, cfg)
     if include is not None:
         keep = include if callable(include) else lambda n: n.startswith(include)
         sites = [s for s in sites if keep(s.name)]
-    records: dict[str, object] = {}
+    units = compress_adapters.units_from_sites(params, sites)
+    res = run_pipeline(units, compression, n_workers=n_workers,
+                       budget_adds=budget_adds, cache_dir=cache_dir,
+                       run_dir=run_dir, resume=resume,
+                       conv_channel_subsample=conv_channel_subsample,
+                       progress=progress)
     packed: dict[str, object] = {}
     params_c = params
     for site in sites:
-        if progress:
-            progress(site.name)
+        rec = res.records[site.name]
         if isinstance(site, compress_adapters.DenseSite):
             w = site.weight(params)
-            cd = core.compress_dense_matrix(site.name, w, compression, report)
-            records[site.name] = cd
             eff = np.zeros_like(w)
-            eff[:, cd.kept_columns] = cd.effective
+            eff[:, rec.kept_columns] = rec.effective
             params_c = compress_adapters.rebind_site(params_c, site, eff)
             if build_packed:
-                packed[site.name] = ops.pack_decomposition(cd.decomposition)
+                packed[site.name] = ops.pack_decomposition(rec.decomposition)
         else:
             kernel = site.kernel(params)
-            rec = core.compress_conv_kernel(
-                site.name, kernel, compression, report,
-                channel_subsample=conv_channel_subsample)
-            records[site.name] = rec
             eff_k = compress_adapters.effective_conv_kernel(
-                kernel, rec, compression.conv_method)
+                kernel, rec, res.unit_configs[site.name].conv_method)
             params_c = compress_adapters.rebind_site(params_c, site, eff_k)
-    return CompressedModel(config=cfg, params=params_c, records=records,
-                           packed=packed, report=report, compression=compression)
+    # record only plans that differ from the global config (allocator output)
+    unit_configs = {n: c for n, c in res.unit_configs.items() if c != compression}
+    return CompressedModel(config=cfg, params=params_c, records=res.records,
+                           packed=packed, report=res.report,
+                           compression=compression, unit_configs=unit_configs,
+                           pipeline_stats=res.stats)
 
 
 from . import compress_adapters as _compress_adapters  # noqa: E402,F401  (registers built-in families)

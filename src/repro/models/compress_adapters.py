@@ -224,6 +224,14 @@ def _audio_sites(params, cfg) -> list[DenseSite]:
     return sites
 
 
+def _mlp_sites(params, cfg) -> list[DenseSite]:
+    # weights are stored [N, K] acting as y = W x (the paper layout): no
+    # transpose.  fc1 is the paper's compression target (Sec. IV-A); fc2 is
+    # listed too and filtered via ``include=`` when only fc1 is wanted.
+    return [DenseSite(name="fc1", path=("fc1", "w"), transpose=False),
+            DenseSite(name="fc2", path=("fc2", "w"), transpose=False)]
+
+
 def _resnet_sites(params, cfg) -> list[DenseSite | ConvSite]:
     sites: list[DenseSite | ConvSite] = [ConvSite(name="stem", path=("stem",))]
     for i, blk in enumerate(params["blocks"]):
@@ -243,6 +251,7 @@ FAMILY_SITE_FNS = {
     "hybrid": _hybrid_sites,
     "audio": _audio_sites,
     "resnet": _resnet_sites,
+    "mlp": _mlp_sites,
 }
 
 

@@ -1,13 +1,26 @@
 """The paper's MLP (Sec. IV-A): one hidden layer of width 300, trained with
 group-lasso regularization on the first layer.  Pure JAX; parameters double as
-``CompressibleDense`` units for the Algorithm-1 pipeline."""
+``CompressibleDense`` units for the Algorithm-1 pipeline — :class:`MLPConfig`
+registers the model as the ``mlp`` family in the compression-adapter registry,
+so ``api.compress_model`` and the parallel pipeline produce a serializable
+``CompressedModel`` artifact for it like for any other architecture."""
 from __future__ import annotations
+
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["init_mlp", "mlp_forward", "mlp_forward_custom",
+__all__ = ["MLPConfig", "init_mlp", "mlp_forward", "mlp_forward_custom",
            "mlp_forward_compressed", "mlp_loss", "mlp_accuracy"]
+
+
+@dataclass(frozen=True)
+class MLPConfig:
+    in_dim: int = 784
+    hidden: int = 300
+    classes: int = 10
+    family: str = "mlp"  # compression-adapter registry key
 
 
 def init_mlp(key, in_dim: int = 784, hidden: int = 300, classes: int = 10,
