@@ -2,6 +2,13 @@
 dense vs compressed, at n_slots in {1, 8} — emitted as machine-readable
 ``BENCH_serving.json`` so the perf trajectory is tracked across PRs.
 
+Three compressed workloads exercise the site-keyed executor:
+``compressed`` (FFN sites only, the historical row), ``compressed+attn``
+(FFN + attention q/k/v/o through the grouped fused launches), and an MoE
+section whose experts apply their chains in one grouped dispatch per layer.
+Each compressed row also reports the paper's Table-1 additions metric
+(``models.flops.compressed_adds``).
+
     PYTHONPATH=src python benchmarks/bench_serving.py [--smoke] [--out FILE]
 
 CPU-container numbers measure the serving loop's dispatch/transfer overhead
@@ -75,46 +82,72 @@ def main() -> None:
 
     from repro import core
     from repro.configs import get_arch
-    from repro.configs.base import reduced_config
-    from repro.models import api
+    from repro.configs.base import MoESpec, reduced_config
+    from repro.models import api, flops
     from repro.serving.engine import ServingEngine
 
     if args.smoke:
         cfg = reduced_config(get_arch("olmo-1b"), d_model=32, n_heads=2,
                              n_kv_heads=2, head_dim=16, d_ff=48, vocab=64,
                              n_layers=2)
+        cfg_moe = reduced_config(
+            get_arch("mixtral-8x22b"), d_model=32, n_heads=2, n_kv_heads=2,
+            head_dim=16, vocab=64, n_layers=1,
+            moe=MoESpec(n_experts=2, top_k=1, d_ff_expert=16,
+                        capacity_factor=8.0))
         steps = 3 if args.steps is None else max(1, args.steps)
         warmup, prompt_len, max_len = 1, 8, 64
     else:
         cfg = reduced_config(get_arch("olmo-1b"))
+        cfg_moe = reduced_config(
+            get_arch("mixtral-8x22b"), d_model=64, n_heads=4, n_kv_heads=4,
+            head_dim=16, vocab=256, n_layers=2,
+            moe=MoESpec(n_experts=4, top_k=2, d_ff_expert=32,
+                        capacity_factor=8.0))
         steps = 20 if args.steps is None else max(1, args.steps)
         warmup, prompt_len, max_len = 3, 16, 256
 
+    comp_cfg = core.CompressionConfig(algorithm="fp", weight_sharing=True,
+                                      max_share_rel_err=0.06)
     params = api.init_params(jax.random.PRNGKey(0), cfg)
-    artifact = api.compress_model(
-        params, cfg,
-        core.CompressionConfig(algorithm="fp", weight_sharing=True,
-                               max_share_rel_err=0.06),
-        include="ffn.")
+    artifact = api.compress_model(params, cfg, comp_cfg, include="ffn.")
+    artifact_all = api.compress_model(params, cfg, comp_cfg)  # + attention
+    params_moe = api.init_params(jax.random.PRNGKey(1), cfg_moe)
+    artifact_moe = api.compress_model(params_moe, cfg_moe, comp_cfg)
 
-    def dense(n):
-        return ServingEngine(params, cfg, n_slots=n, max_len=max_len)
-
-    def compressed(n):
-        return ServingEngine(artifact=artifact, n_slots=n, max_len=max_len)
+    makers = {
+        "dense": lambda n: ServingEngine(params, cfg, n_slots=n,
+                                         max_len=max_len),
+        "compressed": lambda n: ServingEngine(artifact=artifact, n_slots=n,
+                                              max_len=max_len),
+        "compressed+attn": lambda n: ServingEngine(artifact=artifact_all,
+                                                   n_slots=n, max_len=max_len),
+    }
 
     results = []
+
+    def run(mode, make, n_slots, *, arch):
+        t0 = time.time()
+        row = {"mode": mode, "arch": arch, **bench_engine(
+            make, n_slots=n_slots, prompt_len=prompt_len,
+            steps=steps, warmup=warmup)}
+        row["wall_s"] = round(time.time() - t0, 2)
+        results.append(row)
+        print(f"{arch:>12} {mode:>16} n_slots={n_slots}: "
+              f"{row['decode_tok_s']:>8} tok/s decode, "
+              f"{row['prefill_ms']:>7} ms prefill")
+
     for n_slots in (1, 8):
-        for mode, make in (("dense", dense), ("compressed", compressed)):
-            t0 = time.time()
-            row = {"mode": mode, **bench_engine(
-                make, n_slots=n_slots, prompt_len=prompt_len,
-                steps=steps, warmup=warmup)}
-            row["wall_s"] = round(time.time() - t0, 2)
-            results.append(row)
-            print(f"{mode:>10} n_slots={n_slots}: "
-                  f"{row['decode_tok_s']:>8} tok/s decode, "
-                  f"{row['prefill_ms']:>7} ms prefill")
+        for mode, make in makers.items():
+            run(mode, make, n_slots, arch=cfg.name)
+    # MoE: all experts of a layer apply their chains in ONE grouped dispatch
+    for mode, make in (
+            ("dense", lambda n: ServingEngine(params_moe, cfg_moe, n_slots=n,
+                                              max_len=max_len)),
+            ("compressed", lambda n: ServingEngine(artifact=artifact_moe,
+                                                   n_slots=n,
+                                                   max_len=max_len))):
+        run(mode, make, 8, arch=cfg_moe.name)
 
     report = {
         "bench": "serving",
@@ -126,6 +159,11 @@ def main() -> None:
         "steps_requested": steps,
         "compression": {"algorithm": "fp",
                         "ratio_lcc": round(artifact.report.ratio("lcc"), 2)},
+        "adds": {
+            "ffn_only": flops.compressed_adds(cfg, artifact),
+            "ffn+attn": flops.compressed_adds(cfg, artifact_all),
+            "moe": flops.compressed_adds(cfg_moe, artifact_moe),
+        },
         "results": results,
     }
     with open(args.out, "w") as f:

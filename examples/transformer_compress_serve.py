@@ -2,8 +2,9 @@
 the paper's Algorithm 1 over every compressible unit (``api.compress_model``
 via the family adapter registry), save/load the resulting ``CompressedModel``
 artifact through the msgpack+crc32 checkpointer, and SERVE batched requests
-with the FFN projections executing on the fused LCC kernel path *inside* the
-jitted decode step (``ServingEngine(artifact=...)``).
+with EVERY compressed site — FFN and attention projections — executing on the
+fused LCC kernel path *inside* the jitted decode step
+(``ServingEngine(artifact=...)`` builds a site-keyed ``CompressedExecutor``).
 
     train -> compress_model -> CompressedModel.save -> load -> serve
 
@@ -47,14 +48,13 @@ def main() -> None:
             print(f"   step {i:3d}  loss {float(m['loss']):.3f}")
     params = state.params
 
-    print("== 2. Algorithm 1 over every FFN projection (adapter registry) ==")
-    # FP decompositions execute as fused whole-chain kernel launches at serve
-    # time; drop 'include' to also compress the attention projections
+    print("== 2. Algorithm 1 over every FFN + attention projection ==")
+    # every compressed site executes as fused kernel launches at serve time —
+    # pass include="ffn." to restrict compression to the FFN projections
     art = api.compress_model(
         params, cfg,
         CompressionConfig(algorithm="fp", weight_sharing=True,
-                          max_share_rel_err=0.06),
-        include="ffn.")
+                          max_share_rel_err=0.06))
     print(art.report.table())
 
     print("== 3. artifact round-trip: compress once offline, serve many ==")
@@ -69,9 +69,10 @@ def main() -> None:
     prompts = [lm.sample(1, 8, seed=100 + i)[0, :8].tolist() for i in range(6)]
     eng = ServingEngine(params, cfg, n_slots=4, max_len=64)
     eng_c = ServingEngine(artifact=art, n_slots=4, max_len=64)
-    assert eng_c.matvec_overrides is not None  # FFNs on the kernel path
+    assert eng_c.executor is not None  # every site on the kernel path
     res = eng.generate(prompts, max_new_tokens=12)
     res_c = eng_c.generate(prompts, max_new_tokens=12)
+    assert eng_c.executor.routed == eng_c.executor.sites  # all sites fused
     agree = np.mean([np.mean(np.array(a.tokens[a.prompt_len:])
                              == np.array(b.tokens[b.prompt_len:]))
                      for a, b in zip(res, res_c)])
@@ -86,7 +87,7 @@ def main() -> None:
     print(f"   greedy-token agreement original vs compressed: {agree:.2%}")
     print(f"   chain-validity original {validity(res):.2%} | "
           f"compressed {validity(res_c):.2%}")
-    print(f"   total adds ratio (FFN projections): {art.report.ratio('lcc'):.1f}x")
+    print(f"   total adds ratio (all compressed sites): {art.report.ratio('lcc'):.1f}x")
 
 
 if __name__ == "__main__":

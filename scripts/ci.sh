@@ -13,12 +13,18 @@ python -m pytest -x -q
 echo "== quickstart smoke (30s budget) =="
 timeout 30 python examples/quickstart.py
 
-echo "== serving bench smoke (120s budget) =="
+echo "== serving bench smoke (240s budget) =="
 # /tmp output: the tracked BENCH_serving.json is refreshed deliberately per
-# PR, not dirtied by every CI run's machine-dependent numbers
-timeout 120 python benchmarks/bench_serving.py --smoke --out /tmp/BENCH_serving.json
+# PR, not dirtied by every CI run's machine-dependent numbers.  The bench
+# drives the site-keyed executor end-to-end: FFN-only, FFN+attention and MoE
+# (grouped multi-expert launch) compressed rows must all decode.
+timeout 240 python benchmarks/bench_serving.py --smoke --out /tmp/BENCH_serving.json
 python -c "import json; r = json.load(open('/tmp/BENCH_serving.json')); \
-assert r['results'] and all(x['decode_tok_s'] > 0 for x in r['results'])"
+modes = {(x['arch'], x['mode']) for x in r['results']}; \
+assert all(x['decode_tok_s'] > 0 for x in r['results']); \
+assert any(m == 'compressed+attn' for _, m in modes), modes; \
+assert ('mixtral-8x22b', 'compressed') in modes, modes; \
+assert all(v['ratio'] > 1 for v in r['adds'].values()), r['adds']"
 
 echo "== compression pipeline bench smoke (120s budget) =="
 timeout 120 python benchmarks/bench_compress_pipeline.py --smoke \

@@ -35,6 +35,9 @@ __all__ = [
     "conv_forward_fk",
     "conv_forward_pk",
     "conv_layer_adds",
+    "same_pad_2d",
+    "extract_patches",
+    "extract_vert_windows",
 ]
 
 
@@ -80,7 +83,7 @@ def conv_forward_fk(x: jnp.ndarray, fk_mats: jnp.ndarray) -> jnp.ndarray:
     assert kk == k
     p = z - o + 1
     # im2col per channel: [B, K, P, P, O, O]
-    patches = _extract_patches(x, o)
+    patches = extract_patches(x, o)
     # y[b, n, p, q] = sum_k fk[k, n, :] . patch[b, k, p, q, :]
     return jnp.einsum("kno,bkpqo->bnpq", fk_mats, patches.reshape(b, k, p, p, oo))
 
@@ -97,7 +100,7 @@ def conv_forward_pk(x: jnp.ndarray, pk_mats: jnp.ndarray, n_out: int) -> jnp.nda
     b, kk, z, _ = x.shape
     p = z - o + 1
     # column windows: [B, K, P, Z, O] — vertical O-slices at every (row p, col c)
-    cols = _extract_vert_windows(x, o)  # [B, K, P, Z, O]
+    cols = extract_vert_windows(x, o)  # [B, K, P, Z, O]
     part = jnp.einsum("kro,bkpco->bkpcr", pk_mats, cols)  # r = (n, j)
     part = part.reshape(b, k, p, z, n, o)
     # gather j-offset columns: y[..., q] = sum_j part[..., q + j, :, j]
@@ -111,21 +114,29 @@ def conv_forward_pk(x: jnp.ndarray, pk_mats: jnp.ndarray, n_out: int) -> jnp.nda
     return jnp.moveaxis(y, -1, 1)  # [B, N, P, P]
 
 
-def _extract_patches(x: jnp.ndarray, o: int) -> jnp.ndarray:
-    """[B, K, Z, Z] -> [B, K, P, P, O, O] sliding windows (stride 1, valid)."""
+def same_pad_2d(z: int, o: int, stride: int) -> tuple[int, int]:
+    """XLA "SAME" padding amounts (lo, hi) along one spatial dim."""
+    out = -(-z // stride)  # ceil division
+    total = max((out - 1) * stride + o - z, 0)
+    return total // 2, total - total // 2
+
+
+def extract_patches(x: jnp.ndarray, o: int, stride: int = 1) -> jnp.ndarray:
+    """[B, K, Z, Z] -> [B, K, P, P, O, O] sliding windows (valid, strided)."""
     b, k, z, _ = x.shape
-    p = z - o + 1
-    i = jnp.arange(p)[:, None] + jnp.arange(o)[None, :]  # [P, O]
+    p = (z - o) // stride + 1
+    i = stride * jnp.arange(p)[:, None] + jnp.arange(o)[None, :]  # [P, O]
     rows = x[:, :, i, :]  # [B, K, P, O, Z]
     cols = rows[:, :, :, :, i]  # [B, K, P, O, P, O]
     return jnp.transpose(cols, (0, 1, 2, 4, 3, 5))  # [B, K, P, P, O, O]
 
 
-def _extract_vert_windows(x: jnp.ndarray, o: int) -> jnp.ndarray:
-    """[B, K, Z, Z] -> [B, K, P, Z, O]: vertical O-windows at each (p, column)."""
+def extract_vert_windows(x: jnp.ndarray, o: int, stride: int = 1) -> jnp.ndarray:
+    """[B, K, Z, Z] -> [B, K, P, Z, O]: vertical O-windows at each (strided
+    output row p, input column)."""
     b, k, z, _ = x.shape
-    p = z - o + 1
-    i = jnp.arange(p)[:, None] + jnp.arange(o)[None, :]  # [P, O]
+    p = (z - o) // stride + 1
+    i = stride * jnp.arange(p)[:, None] + jnp.arange(o)[None, :]  # [P, O]
     win = x[:, :, i, :]  # [B, K, P, O, Z]
     return jnp.transpose(win, (0, 1, 2, 4, 3))  # [B, K, P, Z, O]
 

@@ -6,5 +6,6 @@ the Pallas interpreter on CPU/GPU (validated in CI) — see ``dispatch``.
 from .dispatch import default_interpret  # noqa: F401
 from .group_prox import group_prox  # noqa: F401
 from .lcc_chain_matmul import lcc_chain_matmul  # noqa: F401
+from .lcc_group_matmul import lcc_group_matmul  # noqa: F401
 from .lcc_matmul import lcc_factor_matmul  # noqa: F401
 from .shared_matmul import cluster_segment_sum  # noqa: F401

@@ -52,8 +52,11 @@ __all__ = ["lcc_chain_matmul"]
 
 def _kernel(idx_ref, exp_ref, sign_ref, x_ref, o_ref, cur_ref, *,
             p_factors: int, s_terms: int, n_pad: int, d_pad: int,
-            first_width: int, use_gather: bool):
-    e = pl.program_id(1)
+            first_width: int, use_gather: bool, slice_axis: int = 1):
+    """Shared chain-evaluation body; ``slice_axis`` names the grid axis that
+    walks the decomposition's slices (1 here, 2 for the grouped launch of
+    ``lcc_group_matmul`` which prepends a group axis)."""
+    e = pl.program_id(slice_axis)
 
     @pl.when(e == 0)
     def _init():

@@ -27,16 +27,20 @@ from repro.core.lcc import LCCChain, LCCDecomposition
 
 from .group_prox import group_prox
 from .lcc_chain_matmul import lcc_chain_matmul
+from .lcc_group_matmul import lcc_group_matmul
 from .lcc_matmul import lcc_factor_matmul
 from .shared_matmul import cluster_segment_sum
 
 __all__ = [
     "PackedChain",
     "PackedDecomposition",
+    "PackedGroup",
     "pack_chain",
     "pack_decomposition",
+    "pack_group",
     "apply_packed_chain",
     "apply_packed_decomposition",
+    "apply_packed_group",
     "segment_sum_tpu",
     "shared_matmul_tpu",
     "group_prox",
@@ -155,6 +159,108 @@ def pack_decomposition(dec: LCCDecomposition, block: int = 128
 def _pad_batch(b: int, block: int) -> tuple[int, int]:
     bb = min(block, b)
     return bb, _round_up(b, bb)
+
+
+@dataclass(frozen=True)
+class PackedGroup:
+    """G packed decompositions re-padded to common dims for ONE grouped launch.
+
+    ``members`` keeps each decomposition's original packing metadata
+    (col_slices over its own input, FS dense fallbacks, true in/out dims);
+    the stacked (idx, exp, sign) carry the shared-padded factor streams that
+    :func:`~repro.kernels.lcc_group_matmul.lcc_group_matmul` consumes.  The
+    streams are kept as *numpy* arrays: groups are assembled lazily — often
+    inside an active jit trace — and cached numpy constants embed per-trace
+    instead of leaking tracers.
+    """
+
+    idx: np.ndarray  # [G, E, P, N_pad, S] int32
+    exp: np.ndarray  # [G, E, P, N_pad, S] int8
+    sign: np.ndarray  # [G, E, P, N_pad, S] int8
+    members: tuple[PackedDecomposition, ...]
+    d_pad: int
+    first_width: int
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.members)
+
+
+def pack_group(members: list[PackedDecomposition]) -> PackedGroup:
+    """Re-pad G packed decompositions to common (E, P, N, S, D) dims.
+
+    Padding preserves the kernel invariants: extra term slots and extra rows
+    carry sign == 0 (decompress to zero), chains are right-extended with
+    identity factors over the shared N_pad, and whole missing slices are
+    all-zero-sign (a zero factor chain on zero input — contributes nothing).
+    """
+    if not members:
+        raise ValueError("pack_group needs at least one member")
+    e_max = max([m.idx.shape[0] for m in members] + [1])
+    p_max = max([m.idx.shape[1] for m in members if m.idx.shape[0]] + [1])
+    n_max = max([m.idx.shape[2] for m in members if m.idx.shape[0]] + [1])
+    s_max = max([m.idx.shape[3] for m in members if m.idx.shape[0]] + [1])
+    d_pad = max([m.d_pad for m in members if m.idx.shape[0]] + [n_max])
+    first_width = max([m.first_width for m in members if m.idx.shape[0]] + [1])
+    gi = np.zeros((len(members), e_max, p_max, n_max, s_max), np.int32)
+    ge = np.zeros(gi.shape, np.int8)
+    gs = np.zeros(gi.shape, np.int8)
+    ident = np.arange(n_max, dtype=np.int32)
+    for g, m in enumerate(members):
+        e, p, n, s = m.idx.shape
+        if e == 0:
+            continue  # FS-only member: dense fallback handles everything
+        gi[g, :e, :p, :n, :s] = np.asarray(m.idx)
+        ge[g, :e, :p, :n, :s] = np.asarray(m.exp)
+        gs[g, :e, :p, :n, :s] = np.asarray(m.sign)
+        # chains shorter than the group max continue as identity factors
+        gi[g, :e, p:, :, 0] = ident
+        gs[g, :e, p:, :, 0] = 1
+    return PackedGroup(idx=gi, exp=ge, sign=gs, members=tuple(members),
+                       d_pad=d_pad, first_width=first_width)
+
+
+def apply_packed_group(pg: PackedGroup, xs, *, block: int = 128,
+                       interpret: bool | None = None) -> list[jnp.ndarray]:
+    """y_g = W_hat_g @ xs[g] for every group member — ONE fused launch.
+
+    ``xs`` is a per-member list of [K_g, B] inputs (all the same B; K_g is the
+    member's own in_dim — members need not agree on input width because each
+    slices/pads its own columns).  FS dense-fallback slices are added per
+    member outside the launch, exactly like :func:`apply_packed_decomposition`.
+    """
+    if len(xs) != len(pg.members):
+        raise ValueError(f"{len(pg.members)} group members, {len(xs)} inputs")
+    b = xs[0].shape[1]
+    bb, b_pad = _pad_batch(b, block)
+    e_max = pg.idx.shape[1]
+    any_fp = any(m.col_slices for m in pg.members)
+    y = None
+    if any_fp:
+        stacks = []
+        for m, x in zip(pg.members, xs):
+            if x.shape[0] != m.in_dim:
+                raise ValueError(f"x has {x.shape[0]} rows, member expects "
+                                 f"in_dim={m.in_dim}")
+            slabs = [jnp.pad(x[c0:c1].astype(jnp.float32),
+                             ((0, pg.d_pad - (c1 - c0)), (0, b_pad - b)))
+                     for c0, c1 in m.col_slices]
+            slabs += [jnp.zeros((pg.d_pad, b_pad), jnp.float32)
+                      ] * (e_max - len(slabs))
+            stacks.append(jnp.stack(slabs))
+        y = lcc_group_matmul(pg.idx, pg.exp, pg.sign, jnp.stack(stacks),
+                             block_b=bb, first_width=pg.first_width,
+                             interpret=interpret)  # [G, N_pad, B_pad]
+    outs = []
+    for g, (m, x) in enumerate(zip(pg.members, xs)):
+        yg = y[g, : m.out_dim, :b] if (y is not None and m.col_slices) else None
+        for (c0, c1), w in m.dense:
+            part = w @ x[c0:c1].astype(jnp.float32)
+            yg = part if yg is None else yg + part
+        if yg is None:
+            raise ValueError("empty decomposition in group: no FP or dense slices")
+        outs.append(yg)
+    return outs
 
 
 def _apply_stacked_per_factor(idx, exp, sign, x_pad, chain_lengths, *,

@@ -18,18 +18,8 @@ from repro import compat
 from repro.configs import get_arch, reduced_config
 from repro.data.synthetic import MarkovLM
 from repro.models import api
-from repro.serving.engine import ServingEngine, compress_ffn_for_serving
+from repro.serving.engine import ServingEngine
 from repro.serving.scheduler import Scheduler
-
-
-def compress_ffn(params, cfg, max_share_rel_err=0.06):
-    """Algorithm-1 steps 2-3 on every FFN projection; returns (params', report)."""
-    params_c, _matvecs, report = compress_ffn_for_serving(
-        params, cfg,
-        core.CompressionConfig(algorithm="fs",
-                               max_share_rel_err=max_share_rel_err),
-        build_matvecs=False)  # the demo serves through the XLA dense path
-    return params_c, report
 
 
 def build_mesh(dp: int, tp: int):
@@ -50,30 +40,47 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--compress", action="store_true",
+                    help="Algorithm 1 over every compressible site (any "
+                         "family), served from the CompressedModel artifact")
+    ap.add_argument("--kernel", action="store_true",
+                    help="with --compress: decode through the site-keyed "
+                         "fused-kernel executor (interpret-mode Pallas off-TPU"
+                         " — slower on CPU dev boxes, the TPU hot path)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--dp", type=int, default=1, help="data-parallel mesh axis")
     ap.add_argument("--tp", type=int, default=1, help="tensor-parallel mesh axis")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as they are sampled")
     args = ap.parse_args()
+    if args.kernel and not args.compress:
+        ap.error("--kernel routes a compressed artifact; pass --compress too")
 
     cfg = get_arch(args.arch)
     if args.reduced or jax.default_backend() == "cpu":
         cfg = reduced_config(cfg, vocab=256)
     params = api.init_params(jax.random.PRNGKey(0), cfg)
+    artifact = None
     if args.compress:
-        if cfg.moe is not None or cfg.family in ("ssm", "hybrid") or cfg.enc_layers:
-            raise SystemExit("--compress demo targets dense FFN archs")
-        params, report = compress_ffn(params, cfg)
-        print(report.table())
+        artifact = api.compress_model(
+            params, cfg,
+            core.CompressionConfig(algorithm="fp" if args.kernel else "fs",
+                                   max_share_rel_err=0.06),
+            build_packed=args.kernel)
+        print(artifact.report.table())
 
     lm = MarkovLM(vocab=cfg.vocab, k=8, seed=0)
     prompts = [lm.sample(1, 8, seed=100 + i)[0, :8].tolist()
                for i in range(args.requests)]
-    eng = ServingEngine(params, cfg, n_slots=args.slots, max_len=128,
-                        temperature=args.temperature,
-                        mesh=build_mesh(args.dp, args.tp))
+    if artifact is not None:
+        eng = ServingEngine(artifact=artifact, n_slots=args.slots, max_len=128,
+                            temperature=args.temperature,
+                            use_kernel=args.kernel,
+                            mesh=build_mesh(args.dp, args.tp))
+    else:
+        eng = ServingEngine(params, cfg, n_slots=args.slots, max_len=128,
+                            temperature=args.temperature,
+                            mesh=build_mesh(args.dp, args.tp))
     sched = Scheduler(eng)
     on_token = ((lambda rid, tok: print(f"  req{rid} += {tok}", flush=True))
                 if args.stream else None)

@@ -55,18 +55,17 @@ def prefill(params, cfg: ArchConfig, batch, *, unroll: bool = False,
 
 
 def decode(params, cfg: ArchConfig, state, token, pos, *, unroll: bool = False,
-           matvec_overrides=None):
-    """One decode step.  ``matvec_overrides`` routes selected projections
-    through custom matvec callables (the compressed-serving hook; see
-    ``transformer.decode_step``)."""
+           executor=None):
+    """One decode step.  ``executor`` is the compressed-serving hook: a
+    site-keyed registry (``repro.serving.executor.CompressedExecutor``) that
+    routes every covered projection — attention, FFN, MoE experts, recurrent
+    mixes, whisper decoder — through fused LCC kernel launches inside the
+    jitted step (see ``transformer.decode_step`` / ``whisper.decode_step``)."""
     if cfg.enc_layers > 0:
-        if matvec_overrides is not None:
-            raise ValueError(
-                "matvec overrides target dense-FFN decode; encoder-decoder "
-                "models serve through their dense-effective params")
-        return whisper.decode_step(params, cfg, state, token, pos, unroll=unroll)
+        return whisper.decode_step(params, cfg, state, token, pos, unroll=unroll,
+                                   executor=executor)
     return transformer.decode_step(params, cfg, state, token, pos, unroll=unroll,
-                                   matvec_overrides=matvec_overrides)
+                                   executor=executor)
 
 
 def sample_tokens(logits, keys, temperature):

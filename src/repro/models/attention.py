@@ -21,7 +21,8 @@ import jax.numpy as jnp
 
 from repro.distributed.act_shard import constrain
 
-from .layers import apply_mrope, apply_rope, dense_init, linear
+from .layers import (apply_mrope, apply_rope, dense_init, linear, site_fmt,
+                     site_linear, site_linear_group)
 
 __all__ = [
     "AttnParams",
@@ -164,14 +165,27 @@ def attention_decode(
     p, x, cache: KVCache, pos, *, n_heads: int, n_kv: int, head_dim: int,
     window: int | None = None, rope_theta: float | None = 10000.0,
     mrope_sections=None, mrope_positions=None, cross: bool = False,
+    executor=None, site: str | None = None,
 ):
     """One-token decode. x [B,1,d]; pos [B] absolute position of this token.
 
     Returns (out [B,1,d], new_cache). With ``window`` the cache is a ring
     buffer (slot = pos % window). ``cross=True`` reads a static cross-attention
-    cache (no update, no causal mask)."""
+    cache (no update, no causal mask).
+
+    ``executor``/``site`` (compressed serving): q/k/v/o route through the
+    executor's fused LCC kernels — q/k/v as ONE grouped launch (they share the
+    input) — for sites named ``site.format(proj)``; uncovered sites stay
+    dense."""
     b = x.shape[0]
-    q = constrain(linear(p["q"], x).reshape(b, 1, n_heads, head_dim),
+    sn = site_fmt(site)
+    if cross:
+        q_raw = site_linear(executor, sn("q"), p["q"], x)
+    else:
+        q_raw, k_raw, v_raw = site_linear_group(
+            executor, (sn("q"), sn("k"), sn("v")),
+            (p["q"], p["k"], p["v"]), x)
+    q = constrain(q_raw.reshape(b, 1, n_heads, head_dim),
                   "batch", None, "model", None)
     if mrope_sections is not None:
         q = apply_mrope(q, mrope_positions, mrope_sections)
@@ -181,8 +195,8 @@ def attention_decode(
     if cross:
         new_cache = cache
     else:
-        k_new = linear(p["k"], x).reshape(b, 1, n_kv, head_dim)
-        v_new = linear(p["v"], x).reshape(b, 1, n_kv, head_dim)
+        k_new = k_raw.reshape(b, 1, n_kv, head_dim)
+        v_new = v_raw.reshape(b, 1, n_kv, head_dim)
         if rope_theta is not None and mrope_sections is None:
             k_new = apply_rope(k_new, pos[:, None], rope_theta)
         elif mrope_sections is not None:
@@ -209,7 +223,7 @@ def attention_decode(
         mask = jnp.where(valid, 0.0, _NEG)[:, None, None, None, :]  # [B,1,1,1,Smax]
     out = _sdpa(qg, k, v, mask)
     out = out.reshape(b, 1, n_heads * head_dim)
-    return linear(p["o"], out.astype(x.dtype)), new_cache
+    return site_linear(executor, sn("o"), p["o"], out.astype(x.dtype)), new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -237,15 +251,20 @@ def init_mla(key, d_model: int, n_heads: int, *, kv_lora: int, qk_nope: int,
 
 
 def _mla_qkv(p, x, c_kv, k_rope_src, positions, kpositions, n_heads, qk_nope, qk_rope, v_dim,
-             rope_theta):
+             rope_theta, executor=None, site=None):
     b, s, _ = x.shape
     sk = c_kv.shape[1]
-    q = linear(p["q"], x).reshape(b, s, n_heads, qk_nope + qk_rope)
+    sn = site_fmt(site)
+    q = site_linear(executor, sn("q"), p["q"], x).reshape(
+        b, s, n_heads, qk_nope + qk_rope)
     q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
     q_rope = apply_rope(q_rope, positions, rope_theta)
-    k_nope = constrain(linear(p["uk"], c_kv).reshape(b, sk, n_heads, qk_nope),
+    # uk/uv share the latent-cache input: one grouped launch when compressed
+    uk, uv = site_linear_group(executor, (sn("uk"), sn("uv")),
+                               (p["uk"], p["uv"]), c_kv)
+    k_nope = constrain(uk.reshape(b, sk, n_heads, qk_nope),
                        "batch", None, "model", None)
-    v = constrain(linear(p["uv"], c_kv).reshape(b, sk, n_heads, v_dim),
+    v = constrain(uv.reshape(b, sk, n_heads, v_dim),
                   "batch", None, "model", None)
     k_rope = apply_rope(k_rope_src[:, :, None, :], kpositions, rope_theta)  # [B,Sk,1,Dr]
     q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
@@ -298,11 +317,12 @@ def mla_prefill(p, x, positions, *, n_heads, kv_lora, qk_nope, qk_rope, v_dim,
 
 
 def mla_decode(p, x, cache: MLACache, pos, *, n_heads, kv_lora, qk_nope, qk_rope,
-               v_dim, rope_theta=10000.0):
+               v_dim, rope_theta=10000.0, executor=None, site: str | None = None):
     b = x.shape[0]
+    sn = site_fmt(site)
     smax = cache.c_kv.shape[1]
-    c_new = linear(p["dkv"], x)  # [B,1,dc]
-    kr_new = linear(p["kr"], x)
+    c_new, kr_new = site_linear_group(executor, (sn("dkv"), sn("kr")),
+                                      (p["dkv"], p["kr"]), x)  # [B,1,dc/Dr]
     onehot = jax.nn.one_hot(pos, smax, dtype=cache.c_kv.dtype)
     c_kv = cache.c_kv * (1 - onehot)[..., None] + onehot[..., None] * c_new
     k_rope = cache.k_rope * (1 - onehot)[..., None] + onehot[..., None] * kr_new
@@ -311,10 +331,11 @@ def mla_decode(p, x, cache: MLACache, pos, *, n_heads, kv_lora, qk_nope, qk_rope
 
     kpositions = jnp.maximum(kpos, 0)
     q, k, v = _mla_qkv(p, x, c_kv, k_rope, pos[:, None], kpositions, n_heads,
-                       qk_nope, qk_rope, v_dim, rope_theta)
+                       qk_nope, qk_rope, v_dim, rope_theta,
+                       executor=executor, site=site)
     qg = q.reshape(b, 1, n_heads, 1, qk_nope + qk_rope)
     valid = (kpos >= 0) & (kpos <= pos[:, None])
     mask = jnp.where(valid, 0.0, _NEG)[:, None, None, None, :]
     out = _sdpa(qg, k, v, mask)
     out = out.reshape(b, 1, n_heads * v_dim)
-    return linear(p["o"], out.astype(x.dtype)), new_cache
+    return site_linear(executor, sn("o"), p["o"], out.astype(x.dtype)), new_cache

@@ -8,7 +8,8 @@ from __future__ import annotations
 
 from repro.configs.base import ArchConfig, ShapeCell
 
-__all__ = ["param_count", "active_param_count", "model_flops", "attention_flops"]
+__all__ = ["param_count", "active_param_count", "model_flops",
+           "attention_flops", "compressed_adds"]
 
 
 def _attn_params(cfg: ArchConfig) -> int:
@@ -100,6 +101,43 @@ def model_flops(cfg: ArchConfig, cell: ShapeCell) -> float:
         return 2.0 * body * tokens  # forward only, no logits in prefill cell
     # decode: one token per sequence
     return 2.0 * (body + head) * cell.global_batch
+
+
+def compressed_adds(cfg, artifact) -> dict:
+    """Paper Table-1 metric for a compressed artifact: matvec *additions* per
+    token at the compressed sites, alongside the dense-MAC counts above.
+
+    Sourced from the artifact's :class:`~repro.core.cost.ModelCostReport`
+    (baseline = CSD shift-add cost of the uncompressed quantized weights, the
+    paper's denominator).  MoE per-expert units are additionally reported
+    with routing applied — only ``top_k / n_experts`` of each expert stack
+    runs per token, so the ``active_*`` pair is the serving-time cost while
+    ``baseline/compressed`` count every stored expert (the paper's storage
+    view).  Returns ``{baseline_adds, compressed_adds, ratio,
+    active_baseline_adds, active_compressed_adds, active_ratio}``.
+    """
+    moe = getattr(cfg, "moe", None)
+    base = comp = a_base = a_comp = 0.0
+    for lc in artifact.report.layers:
+        adds = lc.stage_adds.get("lcc", lc.baseline_adds)
+        scale = 1.0
+        if moe is not None:
+            parts = lc.name.split(".")
+            if (lc.name.startswith("moe.") and parts[-1].startswith("e")
+                    and parts[-1][1:].isdigit()):
+                scale = moe.top_k / moe.n_experts
+        base += lc.baseline_adds
+        comp += adds
+        a_base += lc.baseline_adds * scale
+        a_comp += adds * scale
+    return {
+        "baseline_adds": int(round(base)),
+        "compressed_adds": int(round(comp)),
+        "ratio": base / comp if comp else float("inf"),
+        "active_baseline_adds": int(round(a_base)),
+        "active_compressed_adds": int(round(a_comp)),
+        "active_ratio": a_base / a_comp if a_comp else float("inf"),
+    }
 
 
 def attention_flops(cfg: ArchConfig, cell: ShapeCell, causal_skip: bool = False) -> float:

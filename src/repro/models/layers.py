@@ -15,6 +15,10 @@ from repro.distributed.act_shard import constrain
 __all__ = [
     "dense_init",
     "linear",
+    "matvec_acts",
+    "site_fmt",
+    "site_linear",
+    "site_linear_group",
     "rms_norm",
     "layer_norm",
     "non_parametric_ln",
@@ -41,6 +45,62 @@ def linear(p, x):
     if "b" in p:
         y = y + p["b"]
     return y
+
+
+def site_fmt(site):
+    """Site-name binder for a format template like ``"attn.{}.l3"`` — returns
+    a key -> site-name function (None template => every projection dense)."""
+    return (lambda k: site.format(k)) if site is not None else (lambda k: None)
+
+
+def matvec_acts(fn, x):
+    """Run a features-major matvec (x [K, B] -> [N, B]) on [..., d] acts."""
+    lead = x.shape[:-1]
+    y = fn(x.reshape(-1, x.shape[-1]).astype(jnp.float32).T)
+    return y.T.reshape(*lead, -1).astype(x.dtype)
+
+
+def site_linear(executor, name, p, x):
+    """``linear(p, x)``, routed through the compressed executor's fused-kernel
+    matvec when it covers site ``name`` (dense weights otherwise).
+
+    ``executor`` is duck-typed (see ``repro.serving.executor``): any object
+    with ``matvec(name) -> callable | None``.  Bias (whisper projections) is
+    applied on top of the compressed map — only ``w`` is a compressible site.
+    """
+    fn = executor.matvec(name) if executor is not None else None
+    if fn is None:
+        return linear(p, x)
+    y = matvec_acts(fn, x)
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def site_linear_group(executor, names, ps, xs):
+    """Several projections of one *fused region* (same batch of activations:
+    attention q/k/v, SwiGLU gate/up, RWKV r/k/v/g) in ONE grouped kernel
+    launch when the executor covers every site; per-site
+    :func:`site_linear` fallback otherwise.
+
+    ``xs`` is either one shared activation array or a per-site list; returns
+    the per-site outputs in order.
+    """
+    xlist = list(xs) if isinstance(xs, (list, tuple)) else [xs] * len(names)
+    fused = executor.grouped(tuple(names)) if executor is not None else None
+    if fused is None:
+        return [site_linear(executor, n, p, x)
+                for n, p, x in zip(names, ps, xlist)]
+    lead = xlist[0].shape[:-1]
+    flat = [x.reshape(-1, x.shape[-1]).astype(jnp.float32).T for x in xlist]
+    ys = fused(flat)
+    outs = []
+    for y, p, x in zip(ys, ps, xlist):
+        o = y.T.reshape(*lead, -1).astype(x.dtype)
+        if "b" in p:
+            o = o + p["b"]
+        outs.append(o)
+    return outs
 
 
 def rms_norm(x, w, eps: float = 1e-6):

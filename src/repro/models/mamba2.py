@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.distributed.act_shard import constrain
 
-from .layers import dense_init, linear, rms_norm
+from .layers import dense_init, linear, rms_norm, site_fmt, site_linear
 
 __all__ = ["init_mamba2", "mamba2_prefill", "mamba2_decode", "Mamba2State"]
 
@@ -42,8 +42,9 @@ def init_mamba2(key, d_model: int, *, d_inner: int, d_state: int, head_dim: int,
     }
 
 
-def _split_proj(p, x, d_inner, d_state, h):
-    zxbcdt = constrain(linear(p["in_proj"], x), "batch", None, None)
+def _split_proj(p, x, d_inner, d_state, h, executor=None, site_name=None):
+    zxbcdt = constrain(site_linear(executor, site_name, p["in_proj"], x),
+                       "batch", None, None)
     z, xc, b_in, c_in, dt = jnp.split(
         zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + d_state, 2 * d_inner + 2 * d_state], axis=-1
     )
@@ -138,11 +139,18 @@ def mamba2_prefill(p, x, *, d_inner: int, d_state: int, head_dim: int, d_conv: i
 
 
 def mamba2_decode(p, x, state: Mamba2State, *, d_inner: int, d_state: int,
-                  head_dim: int, d_conv: int):
-    """One-token step. x [B, 1, d_model] -> (y [B, 1, d_model], new state)."""
+                  head_dim: int, d_conv: int, executor=None,
+                  site: str | None = None):
+    """One-token step. x [B, 1, d_model] -> (y [B, 1, d_model], new state).
+
+    ``executor``/``site``: in/out projections route through the compressed
+    executor's fused chains (sites ``site.format("in_proj"/"out_proj")``)."""
     b = x.shape[0]
     h = d_inner // head_dim
-    z, xc, b_in, c_in, dt = _split_proj(p, x, d_inner, d_state, h)
+    sn = site_fmt(site)
+    z, xc, b_in, c_in, dt = _split_proj(p, x, d_inner, d_state, h,
+                                        executor=executor,
+                                        site_name=sn("in_proj"))
     conv_in = jnp.concatenate([xc, b_in, c_in], axis=-1)  # [B,1,Cd]
     win = jnp.concatenate([state.conv, jnp.moveaxis(conv_in, 1, 2)], axis=-1)  # [B,Cd,K]
     conv_out = jnp.einsum("bck,ck->bc", win.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
@@ -157,4 +165,5 @@ def mamba2_decode(p, x, state: Mamba2State, *, d_inner: int, d_state: int,
     y = y + p["D"][None, :, None] * xs[:, 0].reshape(b, h, head_dim)
     y = y.reshape(b, 1, d_inner).astype(x.dtype)
     y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
-    return linear(p["out_proj"], y), Mamba2State(ssm=ssm, conv=win[:, :, 1:])
+    return site_linear(executor, sn("out_proj"), p["out_proj"], y), \
+        Mamba2State(ssm=ssm, conv=win[:, :, 1:])

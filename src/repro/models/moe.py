@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro import compat
 from repro.distributed.act_shard import constrain, get_mesh
 
-from .layers import dense_init, swiglu
+from .layers import dense_init, site_linear, site_linear_group, swiglu
 
 __all__ = ["init_moe", "moe_ffn", "router_aux_losses"]
 
@@ -42,8 +42,17 @@ def init_moe(key, d_model: int, d_ff: int, n_experts: int, n_shared: int, dtype)
 
 
 def moe_ffn(p, x, *, n_experts: int, top_k: int, capacity_factor: float = 1.25,
-            norm_topk: bool = True, min_capacity: int = 4):
-    """x [B, S, d] -> (y [B, S, d], aux dict with router stats)."""
+            norm_topk: bool = True, min_capacity: int = 4, executor=None,
+            site_tag: str | None = None):
+    """x [B, S, d] -> (y [B, S, d], aux dict with router stats).
+
+    ``executor``/``site_tag`` (compressed serving): after the capacity-bounded
+    top-k dispatch, each projection's per-expert matmuls run as ONE grouped
+    fused launch over all experts (sites ``moe.{proj}.{site_tag}.e{e}``) —
+    every expert applies its own LCC chain to its own token buffer in a single
+    Pallas dispatch.  Shared experts route through their own sites
+    (``moe.shared.{proj}.{site_tag}``).  Routing/dispatch math is unchanged.
+    """
     b, s, d = x.shape
     t = b * s
     xt = x.reshape(t, d)
@@ -70,8 +79,21 @@ def moe_ffn(p, x, *, n_experts: int, top_k: int, capacity_factor: float = 1.25,
         buf = buf.at[slot[:, j]].add(xt, mode="drop")
     buf = constrain(buf.reshape(n_experts, cap, d), "model", None, None)
 
-    h_gate = jnp.einsum("ecd,edf->ecf", buf, p["gate"])
-    h_up = jnp.einsum("ecd,edf->ecf", buf, p["up"])
+    def expert_mm(proj, z):
+        """z [E, C, d_in] @ p[proj] [E, d_in, d_out] -> [E, C, d_out]; ONE
+        grouped fused launch over all experts when the executor covers every
+        ``moe.{proj}.{site_tag}.e{e}`` site, dense batched einsum otherwise."""
+        fused = None
+        if executor is not None and site_tag is not None:
+            fused = executor.grouped(tuple(
+                f"moe.{proj}.{site_tag}.e{e}" for e in range(n_experts)))
+        if fused is None:
+            return jnp.einsum("ecd,edf->ecf", z, p[proj])
+        ys = fused([z[e].astype(jnp.float32).T for e in range(n_experts)])
+        return jnp.stack([y.T for y in ys]).astype(z.dtype)
+
+    h_gate = expert_mm("gate", buf)
+    h_up = expert_mm("up", buf)
     mesh = get_mesh()
     ep = (mesh is not None and "model" in mesh.shape
           and n_experts % mesh.shape["model"] == 0 and n_experts >= mesh.shape["model"])
@@ -82,7 +104,7 @@ def moe_ffn(p, x, *, n_experts: int, top_k: int, capacity_factor: float = 1.25,
         h_gate = constrain(h_gate, None, None, "model")
         h_up = constrain(h_up, None, None, "model")
     h = jax.nn.silu(h_gate) * h_up
-    out_buf = constrain(jnp.einsum("ecf,efd->ecd", h, p["down"]),
+    out_buf = constrain(expert_mm("down", h),
                         "model", None, None).reshape(n_experts * cap, d)
 
     y = jnp.zeros((t, d), x.dtype)
@@ -93,7 +115,21 @@ def moe_ffn(p, x, *, n_experts: int, top_k: int, capacity_factor: float = 1.25,
 
     y = constrain(y, "batch", None)
     if "shared" in p:
-        y = y + swiglu(p["shared"], xt)
+        if executor is not None and site_tag is not None:
+            sp = p["shared"]
+            sg, su = site_linear_group(
+                executor, (f"moe.shared.gate.{site_tag}",
+                           f"moe.shared.up.{site_tag}"),
+                (sp["gate"], sp["up"]), xt)
+            # identical TP annotations to the dense-path swiglu
+            sg = constrain(sg, "batch", None, "model")
+            su = constrain(su, "batch", None, "model")
+            y = y + constrain(
+                site_linear(executor, f"moe.shared.down.{site_tag}",
+                            sp["down"], jax.nn.silu(sg) * su),
+                "batch", None, None)
+        else:
+            y = y + swiglu(p["shared"], xt)
 
     aux = {"router_probs_mean": probs.mean(0), "dropped_frac":
            1.0 - keep.mean(), "sel": sel}

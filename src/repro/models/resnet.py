@@ -78,21 +78,38 @@ def _conv(x, k, stride=1):
                                     dimension_numbers=("NCHW", "OIHW", "NCHW"))
 
 
-def resnet_forward(params, x):
-    """x [B, C, H, W] -> logits."""
-    h = _conv(x, params["stem"])
-    for blk in params["blocks"]:
+def resnet_forward(params, x, executor=None):
+    """x [B, C, H, W] -> logits.
+
+    ``executor`` (compressed serving): conv sites with a decomposition run in
+    the compressed domain — the FK/PK conv-as-matmul path applies every
+    decomposed channel's LCC chain in one grouped fused launch — and the
+    linear head routes through its own chain; uncovered sites stay dense.
+    """
+    def conv(name, h, k, stride=1):
+        fn = executor.conv(name) if executor is not None else None
+        if fn is None:
+            return _conv(h, k, stride)
+        return fn(h, stride=stride, padding="SAME")
+
+    h = conv("stem", x, params["stem"])
+    for i, blk in enumerate(params["blocks"]):
         # stride-2 exactly at stage transitions (out channels != in channels);
         # stride is derived, not stored, so the params stay a pure array pytree
         stride = 2 if ("proj" in blk
                        and blk["proj"].shape[0] != blk["proj"].shape[1]) else 1
         y = jax.nn.relu(_gn(h, blk["gn1"]))
-        sc = _conv(y, blk["proj"], stride) if "proj" in blk else h
-        y = _conv(y, blk["conv1"], stride)
+        sc = conv(f"block{i}.proj", y, blk["proj"], stride) if "proj" in blk else h
+        y = conv(f"block{i}.conv1", y, blk["conv1"], stride)
         y = jax.nn.relu(_gn(y, blk["gn2"]))
-        y = _conv(y, blk["conv2"])
+        y = conv(f"block{i}.conv2", y, blk["conv2"])
         h = sc + y
     h = jax.nn.relu(h).mean(axis=(2, 3))
+    head_fn = executor.matvec("head") if executor is not None else None
+    if head_fn is not None:
+        from .layers import matvec_acts
+
+        return matvec_acts(head_fn, h) + params["head"]["b"]
     return h @ params["head"]["w"].T + params["head"]["b"]
 
 

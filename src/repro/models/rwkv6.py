@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.distributed.act_shard import constrain
 
-from .layers import dense_init, linear
+from .layers import dense_init, linear, site_fmt, site_linear, site_linear_group
 
 __all__ = ["init_rwkv6", "rwkv6_timemix_prefill", "rwkv6_timemix_decode",
            "init_rwkv6_channelmix", "rwkv6_channelmix", "RWKV6State"]
@@ -146,16 +146,25 @@ def rwkv6_timemix_prefill(p, x, *, head_dim: int, chunk: int = 256,
     return linear(p["o"], y), RWKV6State(wkv=st, x_prev=x[:, -1])
 
 
-def rwkv6_timemix_decode(p, x, state: RWKV6State, *, head_dim: int):
-    """One-token step. x [B, 1, d]."""
+def rwkv6_timemix_decode(p, x, state: RWKV6State, *, head_dim: int,
+                         executor=None, site: str | None = None):
+    """One-token step. x [B, 1, d].
+
+    ``executor``/``site``: route the r/k/v/g projections through the
+    compressed executor as ONE grouped fused launch (their token-shifted
+    inputs stack along the group axis) and ``o`` through its own chain."""
     b, _, d = x.shape
     h = d // head_dim
+    sn = site_fmt(site)
     x_prev_tok = state.x_prev[:, None]
     xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev_tok)
-    r = linear(p["r"], xr).reshape(b, h, head_dim).astype(jnp.float32)
-    k = linear(p["k"], xk).reshape(b, h, head_dim).astype(jnp.float32)
-    v = linear(p["v"], xv).reshape(b, h, head_dim).astype(jnp.float32)
-    g = jax.nn.silu(linear(p["g"], xg))
+    rr, kk, vv, gg = site_linear_group(
+        executor, (sn("r"), sn("k"), sn("v"), sn("g")),
+        (p["r"], p["k"], p["v"], p["g"]), [xr, xk, xv, xg])
+    r = rr.reshape(b, h, head_dim).astype(jnp.float32)
+    k = kk.reshape(b, h, head_dim).astype(jnp.float32)
+    v = vv.reshape(b, h, head_dim).astype(jnp.float32)
+    g = jax.nn.silu(gg)
     w = jnp.exp(-jnp.exp(p["w0"] + (jnp.tanh(xw @ p["wA"]) @ p["wB"]).astype(jnp.float32)))
     w = w.reshape(b, 1, h, head_dim)[:, 0]
 
@@ -164,7 +173,8 @@ def rwkv6_timemix_decode(p, x, state: RWKV6State, *, head_dim: int):
     wkv = state.wkv.astype(jnp.float32) * w[..., None] + kv
     y = y.reshape(b, 1, d).astype(x.dtype)
     y = _group_norm_heads(y, p["ln_w"], h) * g
-    return linear(p["o"], y), RWKV6State(wkv=wkv, x_prev=x[:, 0])
+    return site_linear(executor, sn("o"), p["o"], y), \
+        RWKV6State(wkv=wkv, x_prev=x[:, 0])
 
 
 def init_rwkv6_channelmix(key, d_model: int, d_ff: int, dtype):
@@ -177,14 +187,22 @@ def init_rwkv6_channelmix(key, d_model: int, d_ff: int, dtype):
     }
 
 
-def rwkv6_channelmix(p, x, x_prev_last=None):
-    """Squared-ReLU channel mix with token shift. Returns (y, last token x)."""
+def rwkv6_channelmix(p, x, x_prev_last=None, *, executor=None,
+                     site: str | None = None):
+    """Squared-ReLU channel mix with token shift. Returns (y, last token x).
+
+    ``executor``/``site``: k/r (shared token-shifted input) run as one grouped
+    fused launch, v through its own chain; dense fallback otherwise."""
     b, s, d = x.shape
+    sn = site_fmt(site)
     xp = jnp.concatenate(
         [x_prev_last[:, None] if x_prev_last is not None else jnp.zeros((b, 1, d), x.dtype),
          x[:, :-1]], axis=1)
     mu = p["mix_mu_k"].astype(x.dtype)
     xk = x + (xp - x) * mu
-    kk = constrain(jnp.square(jax.nn.relu(linear(p["k"], xk))), "batch", None, "model")
-    rr = jax.nn.sigmoid(linear(p["r"], xk))
-    return constrain(rr * linear(p["v"], kk), "batch", None, None), x[:, -1]
+    k_out, r_out = site_linear_group(executor, (sn("k"), sn("r")),
+                                     (p["k"], p["r"]), xk)
+    kk = constrain(jnp.square(jax.nn.relu(k_out)), "batch", None, "model")
+    rr = jax.nn.sigmoid(r_out)
+    v_out = site_linear(executor, sn("v"), p["v"], kk)
+    return constrain(rr * v_out, "batch", None, None), x[:, -1]

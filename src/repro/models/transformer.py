@@ -34,7 +34,8 @@ from .attention import (
     mla_decode,
     mla_prefill,
 )
-from .layers import dense_init, linear, non_parametric_ln, rms_norm, swiglu
+from .layers import (dense_init, linear, non_parametric_ln, rms_norm,
+                     site_linear, site_linear_group, swiglu)
 from .mamba2 import Mamba2State, init_mamba2, mamba2_decode, mamba2_prefill
 from .moe import init_moe, moe_ffn, moe_ffn_manual
 from .rwkv6 import (
@@ -392,70 +393,76 @@ def init_decode_state(cfg: ArchConfig, batch: int, smax: int):
     }
 
 
-def _override_matvec(fn, x):
-    """Run a features-major matvec (x [K, B] -> [N, B]) on [B, S, d] acts."""
-    b, s, d = x.shape
-    y = fn(x.reshape(b * s, d).astype(jnp.float32).T)
-    return y.T.reshape(b, s, -1).astype(x.dtype)
-
-
-def _ffn_with_overrides(overrides, li: int):
-    """SwiGLU whose gate/up/down may be routed through compressed matvecs.
-
-    ``overrides`` maps projection name -> per-layer list of callables (None
-    entries fall back to the dense weight); the callables are the serving
-    engine's fused-LCC kernels, so a compressed model's FFNs execute as
-    shift-add chains *inside* the jitted decode step.
-    """
-    def proj(p, name, x):
-        fns = overrides.get(name)
-        fn = fns[li] if fns is not None and li < len(fns) else None
-        if fn is None:
-            return linear(p[name], x)
-        return _override_matvec(fn, x)
-
+def _sites_swiglu(executor, tag: str):
+    """SwiGLU routed through compressed sites: gate/up (shared input) as ONE
+    grouped fused launch, down through its own chain; uncovered sites dense."""
     def ffn(p, x):
-        g = constrain(proj(p, "gate", x), "batch", None, "model")
-        u = constrain(proj(p, "up", x), "batch", None, "model")
-        y = proj(p, "down", jax.nn.silu(g) * u)
+        g, u = site_linear_group(executor, (tag.format("gate"), tag.format("up")),
+                                 (p["gate"], p["up"]), x)
+        g = constrain(g, "batch", None, "model")
+        u = constrain(u, "batch", None, "model")
+        y = site_linear(executor, tag.format("down"), p["down"],
+                        jax.nn.silu(g) * u)
         return constrain(y, "batch", None, None)
 
     return ffn
 
 
+def _unrolled_layers(body_for, x, xs_all, n_layers: int):
+    """Static per-layer loop so layer ``li`` binds its own kernel buffers
+    (the executor's fused chains are per-site constants, which a lax.scan
+    cannot carry)."""
+    per_layer = []
+    for li in range(n_layers):
+        xs_li = jax.tree.map(lambda a: a[li], xs_all)
+        x, out = body_for(li)(x, xs_li)
+        per_layer.append(out)
+    outs = jax.tree.map(lambda *a: jnp.stack(a), *per_layer)
+    return x, outs
+
+
 def decode_step(params, cfg: ArchConfig, state, token, pos, *, unroll: bool = False,
-                matvec_overrides=None):
+                executor=None):
     """One decode step: (logits [B, V], new state). token [B,1], pos [B].
 
-    ``matvec_overrides`` (compressed serving): ``{"gate"|"up"|"down":
-    [callable|None per layer]}`` — those FFN projections run through the given
-    features-major matvecs (the fused LCC kernel path) instead of the dense
-    weights.  Only the dense-FFN attention families support overrides; the
-    layer loop is unrolled so each layer can bind its own kernel buffers.
+    ``executor`` (compressed serving): a site-keyed registry — see
+    ``repro.serving.executor.CompressedExecutor`` — consulted for EVERY
+    compressible site of the family (attention q/k/v/o or MLA projections,
+    FFN gate/up/down, per-expert MoE matrices, RWKV-6 time/channel mixes,
+    Mamba2 in/out, the zamba2 shared block).  Covered sites execute their LCC
+    chains through fused Pallas launches *inside* this (jitted) step; sites
+    the executor does not cover fall back to the dense weights.  The layer
+    loop is unrolled when an executor is present so each layer binds its own
+    kernel buffers.
     """
     x = jnp.take(params["embed"], token, axis=0).astype(cfg.cdtype)
     blocks = params["blocks"]
-    if matvec_overrides is not None and (
-            cfg.family in ("ssm", "hybrid") or cfg.moe is not None):
-        raise ValueError(
-            f"matvec overrides target dense-FFN decode; family {cfg.family!r} "
-            "with MoE/SSM blocks serves through its dense-effective params")
 
     if cfg.family == "ssm":
-        def body(x, xs):
-            bp, wkv, xp_tm, xp_cm = xs
-            tm_in = _norm(cfg, bp["ln1"], x)
-            y, st = rwkv6_timemix_decode(bp["tm"], tm_in,
-                                         RWKV6State(wkv=wkv, x_prev=xp_tm),
-                                         head_dim=cfg.hd)
-            x = x + y
-            cm_in = _norm(cfg, bp["ln2"], x)
-            y, _cm_last = rwkv6_channelmix(bp["cm"], cm_in, x_prev_last=xp_cm)
-            x = x + y
-            return x, (st.wkv, st.x_prev, cm_in[:, 0])
+        def body_for(li):
+            ex = executor if li is not None else None
 
-        x, outs = _scan(body, x, (blocks, state["wkv"], state["x_prev_tm"],
-                              state["x_prev_cm"]), unroll)
+            def body(x, xs):
+                bp, wkv, xp_tm, xp_cm = xs
+                tm_in = _norm(cfg, bp["ln1"], x)
+                y, st = rwkv6_timemix_decode(
+                    bp["tm"], tm_in, RWKV6State(wkv=wkv, x_prev=xp_tm),
+                    head_dim=cfg.hd, executor=ex,
+                    site=f"tm.{{}}.l{li}" if ex is not None else None)
+                x = x + y
+                cm_in = _norm(cfg, bp["ln2"], x)
+                y, _cm_last = rwkv6_channelmix(
+                    bp["cm"], cm_in, x_prev_last=xp_cm, executor=ex,
+                    site=f"cm.{{}}.l{li}" if ex is not None else None)
+                x = x + y
+                return x, (st.wkv, st.x_prev, cm_in[:, 0])
+            return body
+
+        xs_all = (blocks, state["wkv"], state["x_prev_tm"], state["x_prev_cm"])
+        if executor is None:
+            x, outs = _scan(body_for(None), x, xs_all, unroll)
+        else:
+            x, outs = _unrolled_layers(body_for, x, xs_all, cfg.n_layers)
         new = {"wkv": outs[0], "x_prev_tm": outs[1], "x_prev_cm": outs[2]}
     elif cfg.family == "hybrid":
         period = cfg.hybrid_period
@@ -464,68 +471,147 @@ def decode_step(params, cfg: ArchConfig, state, token, pos, *, unroll: bool = Fa
         nmain = n_groups * period
         sp = params["shared_attn"]
 
-        def mamba_body(x, xs):
-            bp, ssm, conv = xs
-            st = Mamba2State(ssm=ssm, conv=conv)
-            y, st2 = mamba2_decode(bp["mamba"], _norm(cfg, bp["ln1"], x), st,
-                                   d_inner=cfg.ssm.d_inner, d_state=cfg.ssm.d_state,
-                                   head_dim=cfg.ssm.head_dim, d_conv=cfg.ssm.d_conv)
-            return x + y, (st2.ssm, st2.conv)
+        def mamba_body_for(li):
+            ex = executor if li is not None else None
 
-        def group_body(x, xs):
-            gb, gssm, gconv, ak, av, akp = xs
-            x, (ssm2, conv2) = _scan(mamba_body, x, (gb, gssm, gconv), unroll)
+            def mamba_body(x, xs):
+                bp, ssm, conv = xs
+                st = Mamba2State(ssm=ssm, conv=conv)
+                y, st2 = mamba2_decode(
+                    bp["mamba"], _norm(cfg, bp["ln1"], x), st,
+                    d_inner=cfg.ssm.d_inner, d_state=cfg.ssm.d_state,
+                    head_dim=cfg.ssm.head_dim, d_conv=cfg.ssm.d_conv,
+                    executor=ex,
+                    site=f"mamba.{{}}.l{li}" if ex is not None else None)
+                return x + y, (st2.ssm, st2.conv)
+            return mamba_body
+
+        def shared_attn_step(x, ak, av, akp):
             cache = KVCache(k=ak, v=av, kpos=akp)
-            y, c2 = attention_decode(sp["attn"], _norm(cfg, sp["ln1"], x), cache, pos,
-                                     n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
-                                     head_dim=cfg.hd, window=cfg.attn_window,
-                                     rope_theta=cfg.rope_theta)
+            y, c2 = attention_decode(
+                sp["attn"], _norm(cfg, sp["ln1"], x), cache, pos,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                window=cfg.attn_window, rope_theta=cfg.rope_theta,
+                executor=executor,
+                site="shared_attn.attn.{}" if executor is not None else None)
             x = x + y
-            x = x + swiglu(sp["ffn"], _norm(cfg, sp["ln2"], x))
-            return x, (ssm2, conv2, c2.k, c2.v, c2.kpos)
-
-        regroup = lambda a: a[:nmain].reshape(n_groups, period, *a.shape[1:])  # noqa: E731
-        main_b = jax.tree.map(regroup, blocks)
-        x, outs = _scan(group_body, x,
-                        (main_b, regroup(state["ssm"]), regroup(state["conv"]),
-                         state["attn_k"], state["attn_v"], state["attn_kpos"]),
-                        unroll)
-        ssm2 = outs[0].reshape(nmain, *state["ssm"].shape[1:])
-        conv2 = outs[1].reshape(nmain, *state["conv"].shape[1:])
-        if tail:
-            tail_b = jax.tree.map(lambda a: a[nmain:], blocks)
-            x, touts = _scan(mamba_body, x,
-                             (tail_b, state["ssm"][nmain:], state["conv"][nmain:]),
-                             unroll)
-            ssm2 = jnp.concatenate([ssm2, touts[0]])
-            conv2 = jnp.concatenate([conv2, touts[1]])
-        new = {"ssm": ssm2, "conv": conv2, "attn_k": outs[2], "attn_v": outs[3],
-               "attn_kpos": outs[4]}
-    elif cfg.mla is not None:
-        def body(x, xs):
-            bp, ck, kr, kp = xs
-            cache = MLACache(c_kv=ck, k_rope=kr, kpos=kp)
-            y, c2 = mla_decode(bp["attn"], _norm(cfg, bp["ln1"], x), cache, pos,
-                               n_heads=cfg.n_heads, kv_lora=cfg.mla.kv_lora,
-                               qk_nope=cfg.mla.qk_nope, qk_rope=cfg.mla.qk_rope,
-                               v_dim=cfg.mla.v_dim, rope_theta=cfg.rope_theta)
-            x = x + y
-            ffn_in = _norm(cfg, bp["ln2"], x)
-            if cfg.moe is not None:
-                moe_fn = moe_ffn_manual if cfg.moe_manual else moe_ffn
-                y, _ = moe_fn(bp["ffn"], ffn_in, n_experts=cfg.moe.n_experts,
-                              top_k=cfg.moe.top_k,
-                              capacity_factor=cfg.moe.capacity_factor,
-                              norm_topk=cfg.moe.norm_topk)
+            if executor is not None:
+                ffn = _sites_swiglu(executor, "shared_attn.ffn.{}")
+                x = x + ffn(sp["ffn"], _norm(cfg, sp["ln2"], x))
             else:
-                y = swiglu(bp["ffn"], ffn_in)
-            return x + y, (c2.c_kv, c2.k_rope, c2.kpos)
+                x = x + swiglu(sp["ffn"], _norm(cfg, sp["ln2"], x))
+            return x, c2
 
-        x, outs = _scan(body, x, (blocks, state["c_kv"], state["k_rope"],
-                              state["kpos"]), unroll)
+        if executor is None:
+            def group_body(x, xs):
+                gb, gssm, gconv, ak, av, akp = xs
+                x, (ssm2, conv2) = _scan(mamba_body_for(None), x,
+                                         (gb, gssm, gconv), unroll)
+                x, c2 = shared_attn_step(x, ak, av, akp)
+                return x, (ssm2, conv2, c2.k, c2.v, c2.kpos)
+
+            regroup = lambda a: a[:nmain].reshape(n_groups, period, *a.shape[1:])  # noqa: E731
+            main_b = jax.tree.map(regroup, blocks)
+            x, outs = _scan(group_body, x,
+                            (main_b, regroup(state["ssm"]), regroup(state["conv"]),
+                             state["attn_k"], state["attn_v"], state["attn_kpos"]),
+                            unroll)
+            ssm2 = outs[0].reshape(nmain, *state["ssm"].shape[1:])
+            conv2 = outs[1].reshape(nmain, *state["conv"].shape[1:])
+            ak2, av2, akp2 = outs[2], outs[3], outs[4]
+            if tail:
+                tail_b = jax.tree.map(lambda a: a[nmain:], blocks)
+                x, touts = _scan(mamba_body_for(None), x,
+                                 (tail_b, state["ssm"][nmain:], state["conv"][nmain:]),
+                                 unroll)
+                ssm2 = jnp.concatenate([ssm2, touts[0]])
+                conv2 = jnp.concatenate([conv2, touts[1]])
+        else:
+            # unrolled: each mamba layer / the shared block bind their chains
+            ssm_l, conv_l, ak_l, av_l, akp_l = [], [], [], [], []
+            li = 0
+            for g in range(n_groups):
+                for _ in range(period):
+                    xs_li = (jax.tree.map(lambda a: a[li], blocks),
+                             state["ssm"][li], state["conv"][li])
+                    x, (s2, c2) = mamba_body_for(li)(x, xs_li)
+                    ssm_l.append(s2)
+                    conv_l.append(c2)
+                    li += 1
+                x, kv2 = shared_attn_step(x, state["attn_k"][g],
+                                          state["attn_v"][g],
+                                          state["attn_kpos"][g])
+                ak_l.append(kv2.k)
+                av_l.append(kv2.v)
+                akp_l.append(kv2.kpos)
+            for _ in range(tail):
+                xs_li = (jax.tree.map(lambda a: a[li], blocks),
+                         state["ssm"][li], state["conv"][li])
+                x, (s2, c2) = mamba_body_for(li)(x, xs_li)
+                ssm_l.append(s2)
+                conv_l.append(c2)
+                li += 1
+            ssm2 = jnp.stack(ssm_l)
+            conv2 = jnp.stack(conv_l)
+            ak2, av2, akp2 = (jnp.stack(ak_l), jnp.stack(av_l),
+                              jnp.stack(akp_l))
+        new = {"ssm": ssm2, "conv": conv2, "attn_k": ak2, "attn_v": av2,
+               "attn_kpos": akp2}
+    elif cfg.mla is not None:
+        def body_for(li):
+            ex = executor if li is not None else None
+
+            def body(x, xs):
+                bp, ck, kr, kp = xs
+                cache = MLACache(c_kv=ck, k_rope=kr, kpos=kp)
+                y, c2 = mla_decode(
+                    bp["attn"], _norm(cfg, bp["ln1"], x), cache, pos,
+                    n_heads=cfg.n_heads, kv_lora=cfg.mla.kv_lora,
+                    qk_nope=cfg.mla.qk_nope, qk_rope=cfg.mla.qk_rope,
+                    v_dim=cfg.mla.v_dim, rope_theta=cfg.rope_theta,
+                    executor=ex,
+                    site=f"attn.{{}}.l{li}" if ex is not None else None)
+                x = x + y
+                ffn_in = _norm(cfg, bp["ln2"], x)
+                if cfg.moe is not None:
+                    moe_fn = moe_ffn_manual if cfg.moe_manual else moe_ffn
+                    kw = ({"executor": ex, "site_tag": f"l{li}"}
+                          if ex is not None and not cfg.moe_manual else {})
+                    y, _ = moe_fn(bp["ffn"], ffn_in, n_experts=cfg.moe.n_experts,
+                                  top_k=cfg.moe.top_k,
+                                  capacity_factor=cfg.moe.capacity_factor,
+                                  norm_topk=cfg.moe.norm_topk, **kw)
+                elif ex is not None:
+                    y = _sites_swiglu(ex, f"ffn.{{}}.l{li}")(bp["ffn"], ffn_in)
+                else:
+                    y = swiglu(bp["ffn"], ffn_in)
+                return x + y, (c2.c_kv, c2.k_rope, c2.kpos)
+            return body
+
+        xs_all = (blocks, state["c_kv"], state["k_rope"], state["kpos"])
+        if executor is None:
+            x, outs = _scan(body_for(None), x, xs_all, unroll)
+        else:
+            x, outs = _unrolled_layers(body_for, x, xs_all, cfg.n_layers)
         new = {"c_kv": outs[0], "k_rope": outs[1], "kpos": outs[2]}
     else:
-        def make_body(ffn_fn):
+        def body_for(li):
+            ex = executor if li is not None else None
+
+            def ffn_fn(p, ffn_in):
+                if cfg.moe is not None:
+                    moe_fn = moe_ffn_manual if cfg.moe_manual else moe_ffn
+                    kw = ({"executor": ex, "site_tag": f"l{li}"}
+                          if ex is not None and not cfg.moe_manual else {})
+                    y, _ = moe_fn(p, ffn_in, n_experts=cfg.moe.n_experts,
+                                  top_k=cfg.moe.top_k,
+                                  capacity_factor=cfg.moe.capacity_factor,
+                                  norm_topk=cfg.moe.norm_topk, **kw)
+                    return y
+                if ex is not None:
+                    return _sites_swiglu(ex, f"ffn.{{}}.l{li}")(p, ffn_in)
+                return swiglu(p, ffn_in)
+
             def body(x, xs):
                 bp, k, v, kp = xs
                 cache = KVCache(k=k, v=v, kpos=kp)
@@ -536,35 +622,21 @@ def decode_step(params, cfg: ArchConfig, state, token, pos, *, unroll: bool = Fa
                     rope_theta=None if cfg.pos in ("none", "mrope") else cfg.rope_theta,
                     mrope_sections=cfg.mrope_sections if cfg.pos == "mrope" else None,
                     mrope_positions=jnp.broadcast_to(pos[None, :, None], (3, pos.shape[0], 1))
-                    if cfg.pos == "mrope" else None)
+                    if cfg.pos == "mrope" else None,
+                    executor=ex,
+                    site=f"attn.{{}}.l{li}" if ex is not None else None)
                 x = x + y
                 ffn_in = _norm(cfg, bp["ln2"], x)
                 y = ffn_fn(bp["ffn"], ffn_in)
                 return x + y, (c2.k, c2.v, c2.kpos)
             return body
 
-        if cfg.moe is not None:
-            def default_ffn(p, ffn_in):
-                moe_fn = moe_ffn_manual if cfg.moe_manual else moe_ffn
-                y, _ = moe_fn(p, ffn_in, n_experts=cfg.moe.n_experts,
-                              top_k=cfg.moe.top_k,
-                              capacity_factor=cfg.moe.capacity_factor,
-                              norm_topk=cfg.moe.norm_topk)
-                return y
-        else:
-            default_ffn = swiglu
-
         xs_all = (blocks, state["k"], state["v"], state["kpos"])
-        if matvec_overrides is None:
-            x, outs = _scan(make_body(default_ffn), x, xs_all, unroll)
+        if executor is None:
+            x, outs = _scan(body_for(None), x, xs_all, unroll)
         else:
             # unrolled layer loop: each layer binds its own kernel buffers
-            per_layer = []
-            for li in range(cfg.n_layers):
-                xs_li = jax.tree.map(lambda a: a[li], xs_all)
-                x, out = make_body(_ffn_with_overrides(matvec_overrides, li))(x, xs_li)
-                per_layer.append(out)
-            outs = jax.tree.map(lambda *a: jnp.stack(a), *per_layer)
+            x, outs = _unrolled_layers(body_for, x, xs_all, cfg.n_layers)
         new = {"k": outs[0], "v": outs[1], "kpos": outs[2]}
 
     h = _norm(cfg, params["final_ln"], x)

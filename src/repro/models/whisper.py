@@ -11,9 +11,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.distributed.act_shard import constrain
 
 from .attention import KVCache, attention_decode, attention_prefill, init_attention
-from .layers import dense_init, gelu_mlp, layer_norm, linear
+from .layers import dense_init, gelu_mlp, layer_norm, linear, site_linear
 
 __all__ = ["init_params", "encode", "decoder_forward", "loss_fn", "decode_step",
            "init_decode_state"]
@@ -150,35 +151,62 @@ def init_decode_state(cfg: ArchConfig, batch: int, enc_len: int):
     }
 
 
-def decode_step(params, cfg: ArchConfig, state, token, pos, *, unroll: bool = False):
-    """One decoder token against precomputed cross-KV. token [B,1], pos [B]."""
+def decode_step(params, cfg: ArchConfig, state, token, pos, *, unroll: bool = False,
+                executor=None):
+    """One decoder token against precomputed cross-KV. token [B,1], pos [B].
+
+    ``executor`` (compressed serving): decoder self/cross-attention and MLP
+    projections route through the compressed executor's fused LCC chains
+    (sites ``dec.attn.*.l{li}`` / ``dec.xattn.*.l{li}`` / ``dec.mlp.*.l{li}``);
+    the layer loop unrolls so each layer binds its own kernel buffers."""
     b = token.shape[0]
     x = jnp.take(params["embed"], token, axis=0).astype(cfg.cdtype)
     pos_emb = jnp.take(params["dec_pos"], jnp.minimum(pos, cfg.max_decoder_len - 1),
                        axis=0)[:, None]
     x = x + pos_emb.astype(cfg.cdtype)
 
-    def body(x, xs):
-        bp, sk, sv, skp, ck, cv = xs
-        a_in = layer_norm(x, bp["ln1"]["w"], bp["ln1"]["b"])
-        cache = KVCache(k=sk, v=sv, kpos=skp)
-        y, c2 = attention_decode(bp["attn"], a_in, cache, pos, n_heads=cfg.n_heads,
-                                 n_kv=cfg.n_kv_heads, head_dim=cfg.hd, rope_theta=None)
-        x = x + y
-        x_in = layer_norm(x, bp["ln_x"]["w"], bp["ln_x"]["b"])
-        xcache = KVCache(k=ck, v=cv, kpos=jnp.zeros(ck.shape[:2], jnp.int32))
-        y, _ = attention_decode(bp["xattn"], x_in, xcache, pos, n_heads=cfg.n_heads,
-                                n_kv=cfg.n_kv_heads, head_dim=cfg.hd, rope_theta=None,
-                                cross=True)
-        x = x + y
-        m_in = layer_norm(x, bp["ln2"]["w"], bp["ln2"]["b"])
-        x = x + gelu_mlp(bp["mlp"], m_in)
-        return x, (c2.k, c2.v, c2.kpos)
+    def body_for(li):
+        ex = executor if li is not None else None
 
-    from .transformer import _scan
-    x, outs = _scan(body, x, (params["dec_blocks"], state["self_k"],
-                              state["self_v"], state["self_kpos"],
-                              state["cross_k"], state["cross_v"]), unroll)
+        def body(x, xs):
+            bp, sk, sv, skp, ck, cv = xs
+            a_in = layer_norm(x, bp["ln1"]["w"], bp["ln1"]["b"])
+            cache = KVCache(k=sk, v=sv, kpos=skp)
+            y, c2 = attention_decode(
+                bp["attn"], a_in, cache, pos, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, head_dim=cfg.hd, rope_theta=None,
+                executor=ex,
+                site=f"dec.attn.{{}}.l{li}" if ex is not None else None)
+            x = x + y
+            x_in = layer_norm(x, bp["ln_x"]["w"], bp["ln_x"]["b"])
+            xcache = KVCache(k=ck, v=cv, kpos=jnp.zeros(ck.shape[:2], jnp.int32))
+            y, _ = attention_decode(
+                bp["xattn"], x_in, xcache, pos, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, head_dim=cfg.hd, rope_theta=None,
+                cross=True, executor=ex,
+                site=f"dec.xattn.{{}}.l{li}" if ex is not None else None)
+            x = x + y
+            m_in = layer_norm(x, bp["ln2"]["w"], bp["ln2"]["b"])
+            if ex is not None:
+                # same TP annotations as gelu_mlp: d_ff on "model"
+                h = constrain(site_linear(ex, f"dec.mlp.fc1.l{li}",
+                                          bp["mlp"]["fc1"], m_in),
+                              "batch", None, "model")
+                x = x + constrain(site_linear(ex, f"dec.mlp.fc2.l{li}",
+                                              bp["mlp"]["fc2"], jax.nn.gelu(h)),
+                                  "batch", None, None)
+            else:
+                x = x + gelu_mlp(bp["mlp"], m_in)
+            return x, (c2.k, c2.v, c2.kpos)
+        return body
+
+    from .transformer import _scan, _unrolled_layers
+    xs_all = (params["dec_blocks"], state["self_k"], state["self_v"],
+              state["self_kpos"], state["cross_k"], state["cross_v"])
+    if executor is None:
+        x, outs = _scan(body_for(None), x, xs_all, unroll)
+    else:
+        x, outs = _unrolled_layers(body_for, x, xs_all, cfg.n_layers)
     h = layer_norm(x, params["dec_ln"]["w"], params["dec_ln"]["b"])
     logits = (h @ params["embed"].T.astype(h.dtype))[:, 0]
     new = {"self_k": outs[0], "self_v": outs[1], "self_kpos": outs[2],

@@ -20,16 +20,20 @@ Scheduling (queues, priorities, admission, streaming callbacks, failed-request
 isolation) lives in :class:`repro.serving.scheduler.Scheduler`; ``generate()``
 is a thin convenience wrapper over it.
 
-Compressed serving is first-class and artifact-driven: compress offline with
-``models.api.compress_model``, save the :class:`~repro.core.artifact.
-CompressedModel`, and construct ``ServingEngine(artifact=art)``.  The engine
-serves the artifact's dense-effective params and — for dense-FFN families —
-routes every FFN projection through :class:`LCCMatvec` *inside* the jitted
-decode step, so FP decompositions execute their whole factor chain as ONE
-fused Pallas launch (``repro.kernels.lcc_chain_matmul``, the shift-add
+Compressed serving is first-class, artifact-driven and family-agnostic:
+compress offline with ``models.api.compress_model``, save the
+:class:`~repro.core.artifact.CompressedModel`, and construct
+``ServingEngine(artifact=art)``.  The engine builds a site-keyed
+:class:`~repro.serving.executor.CompressedExecutor` over the artifact and the
+model decode paths consult it *inside* the jitted step — attention q/k/v/o
+(and MLA projections), FFN gate/up/down, per-expert MoE matrices (all experts
+of a layer in ONE grouped launch), RWKV-6 time/channel mixes, Mamba2 in/out
+projections and the whisper decoder all execute their LCC chains as fused
+Pallas launches (``lcc_chain_matmul`` / ``lcc_group_matmul``, the shift-add
 runtime the paper targets).  FS decompositions evaluate through their dense
-equivalent.  :func:`compress_ffn_for_serving` remains as the legacy
-FFN-only wrapper over the same pipeline.
+equivalent; sites the artifact does not cover stay dense.
+:func:`compress_ffn_for_serving` remains as the legacy FFN-only wrapper over
+the same pipeline.
 """
 from __future__ import annotations
 
@@ -43,9 +47,11 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.models import api
+from repro.serving.executor import (CompressedExecutor, LCCMatvec,
+                                    matvecs_from_artifact)
 
 __all__ = ["ServingEngine", "GenerationResult", "StepEvent", "LCCMatvec",
-           "compress_ffn_for_serving"]
+           "CompressedExecutor", "compress_ffn_for_serving"]
 
 
 @dataclass
@@ -68,8 +74,8 @@ class StepEvent:
 class ServingEngine:
     """``ServingEngine(params, cfg)`` serves raw weights; ``ServingEngine(
     artifact=compressed_model)`` serves a compression artifact (params and
-    config come from the artifact, and FFN projections of dense-FFN families
-    run on the fused LCC kernel path unless ``use_kernel=False``).  Pass
+    config come from the artifact, and every compressed site — any family —
+    runs on the fused LCC kernel path unless ``use_kernel=False``).  Pass
     ``mesh=`` for sharded multi-device decode."""
 
     def __init__(self, params=None, cfg: ArchConfig | None = None, *,
@@ -115,43 +121,28 @@ class ServingEngine:
         self.slot_req: dict[int, int] = {}
         self._next_req = 0
         self._prefill_fns: dict[int, object] = {}
-        self.matvec_overrides = (
-            self._build_overrides(artifact, interpret) if use_kernel else None)
-        ov = self.matvec_overrides
+        self.executor = (
+            self._build_executor(artifact, interpret) if use_kernel else None)
+        ex = self.executor
         self._decode = jax.jit(
-            lambda p, s, t, pos: api.decode(p, cfg, s, t, pos,
-                                            matvec_overrides=ov))
+            lambda p, s, t, pos: api.decode(p, cfg, s, t, pos, executor=ex))
         self.step_dispatches = 0  # jitted fused-step invocations (observability)
         self._step_fn = self._build_step_fn()
 
     @staticmethod
-    def _build_overrides(artifact, interpret):
-        """Per-layer LCCMatvec table for the FFN projections of a dense-FFN
-        artifact (None when the artifact has no routable units)."""
-        if artifact is None or api.family_of(artifact.config) not in ("dense", "vlm"):
+    def _build_executor(artifact, interpret):
+        """Site-keyed :class:`CompressedExecutor` over the artifact — family
+        agnostic (None when the artifact has no routable sites)."""
+        if artifact is None:
             return None
-        cfg = artifact.config
-        ov: dict[str, list] = {}
-        for proj in ("gate", "up", "down"):
-            fns: list = [None] * cfg.n_layers
-            found = False
-            for li in range(cfg.n_layers):
-                name = f"ffn.{proj}.l{li}"
-                rec = artifact.records.get(name)
-                if rec is None:
-                    continue
-                fns[li] = LCCMatvec(rec, packed=artifact.packed.get(name),
-                                    interpret=interpret)
-                found = True
-            if found:
-                ov[proj] = fns
-        return ov or None
+        ex = CompressedExecutor(artifact, interpret=interpret)
+        return ex if ex.sites else None
 
     # ---------------------------------------------------------- fused step
     def _build_step_fn(self):
         """Jit the whole decode step — forward, sampling, bookkeeping — so
         ``step()`` costs one dispatch and one small device->host transfer."""
-        cfg, ov, max_len = self.cfg, self.matvec_overrides, self.max_len
+        cfg, ex, max_len = self.cfg, self.executor, self.max_len
 
         def fused(params, state, last_tok, pos, active, new_count,
                   max_new, temps, keys, eos):
@@ -165,7 +156,7 @@ class ServingEngine:
             toks = jnp.where(emit, last_tok, 0)[:, None]
             dpos = jnp.where(emit, pos - 1, -1).astype(jnp.int32)
             logits, new_state = api.decode(params, cfg, state, toks, dpos,
-                                           matvec_overrides=ov)
+                                           executor=ex)
             sub = jax.vmap(jax.random.fold_in)(keys, new_count)
             nxt = api.sample_tokens(logits.astype(jnp.float32), sub, temps)
             nxt = jnp.where(emit, nxt, last_tok)
@@ -408,58 +399,6 @@ class ServingEngine:
 # ---------------------------------------------------------------- compression
 
 
-class LCCMatvec:
-    """One compressed projection as a fused-kernel matvec: x [K, B] -> [N, B].
-
-    Prune (kept_columns gather) -> optional weight-sharing segment-sum (paper
-    eq. (10)) -> the whole FP decomposition in a single ``lcc_chain_matmul``
-    launch.  Built from a ``core.compress.CompressedDense`` record; pass
-    ``packed=`` to reuse an artifact's pre-packed kernel buffers instead of
-    re-packing the decomposition.
-
-    ``B`` is bucketed to powers of two (pad + slice), so serving many distinct
-    decode/prefill batch widths compiles at most log2 variants of the fused
-    chain instead of one per width.
-    """
-
-    def __init__(self, cd, *, packed=None, block: int = 128,
-                 interpret: bool | None = None):
-        from repro.kernels import ops
-
-        self.name = cd.name
-        self.packed = (packed if packed is not None
-                       else ops.pack_decomposition(cd.decomposition, block))
-        self.kept = jnp.asarray(np.asarray(cd.kept_columns), jnp.int32)
-        self.labels = (jnp.asarray(cd.shared.labels, jnp.int32)
-                       if cd.shared is not None else None)
-        self.n_clusters = cd.shared.n_clusters if cd.shared is not None else 0
-        self.interpret = interpret
-        # jit the whole chain (gather -> segment-sum -> fused kernel) so a
-        # per-token decode loop pays one dispatch, not one per slice/stage
-        self._fn = jax.jit(self._run)
-
-    def _run(self, x: jnp.ndarray) -> jnp.ndarray:
-        from repro.kernels import ops
-
-        xk = x[self.kept]
-        if self.labels is not None:
-            xk = ops.segment_sum_tpu(self.labels, xk, self.n_clusters,
-                                     interpret=self.interpret)
-        return ops.apply_packed_decomposition(self.packed, xk,
-                                              interpret=self.interpret)
-
-    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
-        vec = x.ndim == 1
-        if vec:
-            x = x[:, None]
-        b = x.shape[1]
-        b_pad = 1 << (b - 1).bit_length()  # next power of two (b=1 -> 1)
-        if b_pad != b:
-            x = jnp.pad(x, ((0, 0), (0, b_pad - b)))
-        y = self._fn(x)
-        return y[:, 0] if vec else y[:, :b]
-
-
 def compress_ffn_for_serving(params, cfg: ArchConfig, compression=None, *,
                              report=None, interpret: bool | None = None,
                              build_matvecs: bool = True):
@@ -468,8 +407,10 @@ def compress_ffn_for_serving(params, cfg: ArchConfig, compression=None, *,
     Returns ``(params_c, matvecs, report)`` for the FFN projections of a
     dense-FFN transformer: ``params_c`` are the full params with FFN weights
     replaced by their compressed dense equivalent, ``matvecs[proj][layer]``
-    the :class:`LCCMatvec` kernels.  Other families are compressed through
-    ``api.compress_model`` + ``ServingEngine(artifact=...)`` directly.
+    the :class:`LCCMatvec` kernels (built through
+    :func:`~repro.serving.executor.matvecs_from_artifact`).  Every family —
+    and every non-FFN site — is served via ``api.compress_model`` +
+    ``ServingEngine(artifact=...)`` directly.
     """
     from repro import core
 
@@ -488,10 +429,8 @@ def compress_ffn_for_serving(params, cfg: ArchConfig, compression=None, *,
             report.add(lc)
     matvecs: dict[str, list[LCCMatvec]] = {}
     if build_matvecs:
+        table = matvecs_from_artifact(art, include="ffn.", interpret=interpret)
         for proj in ("gate", "up", "down"):
-            matvecs[proj] = [
-                LCCMatvec(art.records[f"ffn.{proj}.l{li}"],
-                          packed=art.packed.get(f"ffn.{proj}.l{li}"),
-                          interpret=interpret)
-                for li in range(cfg.n_layers)]
+            matvecs[proj] = [table[f"ffn.{proj}.l{li}"]
+                             for li in range(cfg.n_layers)]
     return art.params, matvecs, art.report if report is None else report

@@ -150,32 +150,42 @@ def test_artifact_corrupted_shard_skipped(dense_artifact, tmp_path):
 
 
 def test_engine_decode_runs_fused_kernel(dense_artifact, monkeypatch):
-    """ServingEngine(artifact=...) routes FFN projections through the fused
-    lcc_chain_matmul launch inside the jitted decode step, and its logits
-    match the dense-effective forward to <= 1e-4."""
+    """ServingEngine(artifact=...) routes every compressed site (FFN *and*
+    attention) through fused kernel launches inside the jitted decode step,
+    and its logits match the dense-effective forward to <= 1e-4."""
     from repro.kernels import ops
 
-    calls = {"n": 0}
-    real = ops.lcc_chain_matmul
+    calls = {"chain": 0, "group": 0}
+    real_chain, real_group = ops.lcc_chain_matmul, ops.lcc_group_matmul
 
-    def counting(*a, **k):
-        calls["n"] += 1
-        return real(*a, **k)
+    def counting_chain(*a, **k):
+        calls["chain"] += 1
+        return real_chain(*a, **k)
 
-    monkeypatch.setattr(ops, "lcc_chain_matmul", counting)
+    def counting_group(*a, **k):
+        calls["group"] += 1
+        return real_group(*a, **k)
+
+    monkeypatch.setattr(ops, "lcc_chain_matmul", counting_chain)
+    monkeypatch.setattr(ops, "lcc_group_matmul", counting_group)
 
     cfg = dense_artifact.config
     eng = ServingEngine(artifact=dense_artifact, n_slots=2, max_len=32)
-    assert eng.matvec_overrides is not None
-    assert set(eng.matvec_overrides) == {"gate", "up", "down"}
+    assert eng.executor is not None
+    assert eng.executor.sites == set(dense_artifact.records)
     res = eng.generate([[3, 1, 4], [1, 5]], max_new_tokens=4)
     assert all(r.finished for r in res)
-    assert calls["n"] > 0, "fused kernel was never traced into the decode step"
+    assert calls["chain"] + calls["group"] > 0, \
+        "fused kernels were never traced into the decode step"
+    assert calls["group"] > 0, "no fused-region (grouped) launch was traced"
+    # every compressed site dispatched through a fused kernel — nothing fell
+    # back to the dense-effective matmul on the hot path
+    assert eng.executor.routed == eng.executor.sites
 
     # same artifact served through the stock XLA dense-effective path
     eng_dense = ServingEngine(artifact=dense_artifact, n_slots=2, max_len=32,
                               use_kernel=False)
-    assert eng_dense.matvec_overrides is None
+    assert eng_dense.executor is None
     res_d = eng_dense.generate([[3, 1, 4], [1, 5]], max_new_tokens=4)
     assert [r.tokens for r in res] == [r.tokens for r in res_d]
 
@@ -183,22 +193,9 @@ def test_engine_decode_runs_fused_kernel(dense_artifact, monkeypatch):
     tok = jnp.asarray([[3]], jnp.int32)
     pos = jnp.asarray([0], jnp.int32)
     l_kernel, _ = api.decode(dense_artifact.params, cfg, state, tok, pos,
-                             matvec_overrides=eng.matvec_overrides)
+                             executor=eng.executor)
     l_dense, _ = api.decode(dense_artifact.params, cfg, state, tok, pos)
     assert float(jnp.abs(l_kernel - l_dense).max()) <= 1e-4
-
-
-def test_matvec_overrides_rejected_for_moe():
-    cfg_m = reduced_config(
-        get_arch("mixtral-8x22b"), d_model=32, n_heads=2, n_kv_heads=2,
-        head_dim=16, vocab=64, n_layers=1,
-        moe=MoESpec(n_experts=2, top_k=1, d_ff_expert=16, capacity_factor=8.0))
-    pm = api.init_params(jax.random.PRNGKey(1), cfg_m)
-    st = api.init_decode_state(cfg_m, 1, 8)
-    with pytest.raises(ValueError, match="dense-FFN"):
-        api.decode(pm, cfg_m, st, jnp.asarray([[0]], jnp.int32),
-                   jnp.asarray([0], jnp.int32),
-                   matvec_overrides={"gate": [lambda x: x]})
 
 
 # ---------------------------------------------------------------- prefill

@@ -122,6 +122,54 @@ def test_fused_kernel_onehot_formulation_matches_gather():
     np.testing.assert_allclose(onehot, gather, rtol=1e-6, atol=1e-6)
 
 
+def test_grouped_launch_matches_per_decomposition():
+    """lcc_group_matmul applies G whole decompositions in ONE launch == the
+    per-decomposition fused path, across mixed shapes, chain lengths, slice
+    counts and an FS-only (dense-fallback) member."""
+    rng = np.random.default_rng(31)
+    decs = []
+    for g, (shape, algo, sw) in enumerate([((24, 16), "fp", None),
+                                           ((8, 16), "fp", None),
+                                           ((24, 40), "fs", 8),
+                                           ((12, 12), "fp", None)]):
+        decs.append(lcc_decompose(rng.standard_normal(shape), algorithm=algo,
+                                  target_snr_db=35.0, slice_width=sw))
+    packed = [ops.pack_decomposition(d) for d in decs]
+    pg = ops.pack_group(packed)
+    xs = [jnp.asarray(rng.standard_normal((d.shape[1], 5)), jnp.float32)
+          for d in decs]
+    ys = ops.apply_packed_group(pg, xs)
+    for g, (d, x, y) in enumerate(zip(decs, xs, ys)):
+        want = np.asarray(ops.apply_packed_decomposition(packed[g], x))
+        np.testing.assert_allclose(np.asarray(y), want, rtol=1e-6, atol=1e-6,
+                                   err_msg=f"group member {g}")
+
+
+def test_grouped_launch_onehot_formulation_matches_gather():
+    """The grouped kernel's compiled (one-hot/MXU) branch == its gather
+    branch under the interpreter — TPU formulation covered by CPU CI."""
+    from repro.kernels.lcc_group_matmul import lcc_group_matmul
+
+    rng = np.random.default_rng(32)
+    decs = [lcc_decompose(rng.standard_normal((16, 12)), algorithm="fp",
+                          target_snr_db=35.0) for _ in range(3)]
+    pg = ops.pack_group([ops.pack_decomposition(d) for d in decs])
+    e_max = pg.idx.shape[1]
+    stacks = []
+    for m in pg.members:
+        slabs = [jnp.pad(jnp.asarray(rng.standard_normal((c1 - c0, 4)),
+                                     jnp.float32),
+                         ((0, pg.d_pad - (c1 - c0)), (0, 0)))
+                 for c0, c1 in m.col_slices]
+        slabs += [jnp.zeros((pg.d_pad, 4), jnp.float32)] * (e_max - len(slabs))
+        stacks.append(jnp.stack(slabs))
+    args = (pg.idx, pg.exp, pg.sign, jnp.stack(stacks))
+    kw = dict(block_b=4, first_width=pg.first_width, interpret=True)
+    gather = np.asarray(lcc_group_matmul(*args, use_gather=True, **kw))
+    onehot = np.asarray(lcc_group_matmul(*args, use_gather=False, **kw))
+    np.testing.assert_allclose(onehot, gather, rtol=1e-6, atol=1e-6)
+
+
 def test_fused_kernel_interpret_override_matches():
     """Explicit interpret=True equals the auto-detected default on this host."""
     rng = np.random.default_rng(23)
