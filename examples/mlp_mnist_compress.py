@@ -1,74 +1,112 @@
-"""Paper Sec. IV-A end to end: MLP-300 + Algorithm 1 (regularized training ->
-affinity-propagation weight sharing -> LCC) on the unified pipeline API, with
-compressed-accuracy checks via the serializable ``CompressedModel`` artifact.
+"""Paper Sec. IV-A end to end — the complete Algorithm-1 loop:
+
+1. compression-aware regularized training: ProxSGD (eq. (7)/(8)) whose group
+   layout is derived from the SAME adapter sites the compressor later slices,
+   so regularization and compression can never disagree;
+2. prune-aware parallel compression: exactly-zero input groups become 0-add
+   skipped slice jobs, partially-dead slices shrink;
+3. post-compression recovery fine-tuning: a dense residual trained on top of
+   the frozen shift-add chains, written back into the artifact;
+4. serving from the (saved + reloaded) ``CompressedModel`` artifact.
 
     PYTHONPATH=src python examples/mlp_mnist_compress.py [--lam 0.1] \
-        [--epochs 10] [--workers 2]
+        [--epochs 12] [--workers 2] [--recover 60]
 """
 import argparse
 import tempfile
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 import repro.core as core
 from repro.core.artifact import CompressedModel
-from repro.data.synthetic import batches, digits_like
+from repro.data.mnist_like import train_test
+from repro.data.synthetic import batches
 from repro.models import api
 from repro.models.mlp import MLPConfig, init_mlp, mlp_accuracy, mlp_loss
 from repro.optim.optimizers import prox_sgd, step_decay
+from repro.training import regularize
+from repro.training.recover import recover_artifact
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--lam", type=float, default=0.1)
-    ap.add_argument("--epochs", type=int, default=10)
+    ap.add_argument("--epochs", type=int, default=12)
     ap.add_argument("--hidden", type=int, default=300)
-    ap.add_argument("--algorithm", choices=["fp", "fs"], default="fs")
+    ap.add_argument("--algorithm", choices=["fp", "fs"], default="fp")
     ap.add_argument("--workers", type=int, default=2,
                     help="pipeline worker processes")
+    ap.add_argument("--recover", type=int, default=60,
+                    help="recovery fine-tune steps (0 disables)")
+    ap.add_argument("--budget", type=int, default=None,
+                    help="global additions budget (allocator)")
     args = ap.parse_args()
 
-    print("== 1. regularized training (ProxSGD, eq. (7)/(8)) ==")
+    print("== 1. compression-aware regularized training (ProxSGD, eq. (7)) ==")
     cfg = MLPConfig(hidden=args.hidden)
-    xs, ys = digits_like(2048, seed=0)
-    xte, yte = digits_like(512, seed=1)
+    (xs, ys), (xte, yte) = train_test(4000, 1000, seed=0)
+    xte_j, yte_j = jnp.asarray(xte), jnp.asarray(yte)
     params = init_mlp(jax.random.PRNGKey(0), hidden=cfg.hidden)
-    opt = prox_sgd(momentum=0.9, prox_spec={"fc1/w": (args.lam, "columns")})
+    specs = regularize.site_group_specs(params, cfg, args.lam, include="fc1")
+    opt = prox_sgd(momentum=0.9, specs=specs)
     state = opt.init(params)
-    lr = step_decay(0.1, 0.95, 10)
+    lr = step_decay(0.08, 0.95, 3)
     grad = jax.jit(jax.grad(mlp_loss))
     upd = jax.jit(lambda g, s, p, l: opt.update(g, s, p, l))
     for ep in range(args.epochs):
         for xb, yb in batches(xs, ys, 128, seed=ep):
             g = grad(params, jnp.asarray(xb), jnp.asarray(yb))
             params, state = upd(g, state, params, lr(ep))
-    acc = float(mlp_accuracy(params, jnp.asarray(xte), jnp.asarray(yte)))
-    w1 = np.asarray(params["fc1"]["w"], np.float64)
-    kept = int((np.linalg.norm(w1, axis=0) > 1e-8).sum())
-    print(f"   accuracy {acc:.3f};  input neurons kept {kept}/{cfg.in_dim}")
+    acc = float(mlp_accuracy(params, xte_j, yte_j))
+    rep = regularize.sparsity_report(params, specs)
+    print(f"   accuracy {acc:.3f};  dead input groups "
+          f"{regularize.dead_group_fraction(rep):.1%}")
 
-    print("== 2+3. weight sharing + LCC via the parallel pipeline "
-          f"({args.workers} workers) ==")
-    art = api.compress_model(
-        params, cfg, core.CompressionConfig(algorithm=args.algorithm),
-        include="fc1", n_workers=args.workers)
-    lc = art.report.layers[0]
-    print(f"   clusters: {lc.extra['clusters']}  achieved SNR: "
-          f"{lc.extra['achieved_snr_db']:.1f} dB  "
-          f"({art.pipeline_stats['jobs']} slice jobs, "
-          f"{art.pipeline_stats['wall_s']}s)")
-    print(art.report.table())
+    print(f"== 2. prune-aware compression ({args.workers} workers) ==")
+    comp = core.CompressionConfig(algorithm=args.algorithm,
+                                  weight_sharing=False, prune_tol=-1e-6,
+                                  snr_offset_db=-12.0)
+    art = api.compress_model(params, cfg, comp, n_workers=args.workers,
+                             budget_adds=args.budget)
+    ps = art.pipeline_stats
+    print(f"   adds {art.report.total_baseline()} -> "
+          f"{art.report.total_stage('lcc')};  dead groups "
+          f"{ps['dead_groups']}, skipped {ps['skipped_jobs']} / shrunk "
+          f"{ps['shrunk_jobs']} of {ps['jobs']} slice jobs")
+    acc_c = float(mlp_accuracy(art.params, xte_j, yte_j))
 
-    print("== 4. artifact round-trip: compress once, evaluate from disk ==")
+    acc_r = acc_c
+    if args.recover:
+        print(f"== 3. recovery fine-tuning ({args.recover} steps) ==")
+
+        def loss_fn(p, b):
+            return mlp_loss(p, b[0], b[1])
+
+        def rec_batches():
+            n, ep = 0, 0
+            while n < args.recover:
+                for xb, yb in batches(xs, ys, 128, seed=1000 + ep):
+                    if n >= args.recover:
+                        return
+                    yield jnp.asarray(xb), jnp.asarray(yb)
+                    n += 1
+                ep += 1
+
+        res = recover_artifact(art, loss_fn, rec_batches(), lr=2e-3)
+        acc_r = float(mlp_accuracy(art.params, xte_j, yte_j))
+        extra = sum(u.get("recover_adds", 0) for u in res["units"].values())
+        print(f"   loss {res['losses'][0]:.4f} -> {res['losses'][-1]:.4f};  "
+              f"residual adds +{extra}")
+
+    print("== 4. artifact round-trip: serve the recovered model from disk ==")
     with tempfile.TemporaryDirectory() as d:
         art.save(d)
         art = CompressedModel.load(d)
-    # the artifact's params carry fc1's dense-effective map — drop-in forward
-    acc_c = float(mlp_accuracy(art.params, jnp.asarray(xte), jnp.asarray(yte)))
-    print(f"== result: accuracy {acc:.3f} -> {acc_c:.3f} compressed; "
-          f"adds ratio {lc.ratio('lcc'):.1f}x ==")
+    acc_d = float(mlp_accuracy(art.params, xte_j, yte_j))
+    print(f"== result: dense {acc:.3f} -> compressed {acc_c:.3f} -> "
+          f"recovered {acc_r:.3f} (from disk {acc_d:.3f});  adds ratio "
+          f"{art.report.ratio('lcc'):.2f}x ==")
 
 
 if __name__ == "__main__":

@@ -34,4 +34,22 @@ assert r['results'] and all(x['wall_s'] > 0 for x in r['results']); \
 assert r['cache']['speedup'] > 1 and r['cache']['warm_hits'] == r['jobs']; \
 assert r['cpu_count'] < 4 or r['speedup_4v1'] > 1.0, r['speedup_4v1']"
 
+echo "== train -> compress -> recover -> serve smoke (60s budget) =="
+# the paper's full Algorithm-1 loop on the MLP: prox-regularized training must
+# produce dead input groups, the prune-aware planner must turn them into
+# skipped/shrunk 0-add slice jobs, and recovery + fused serving must complete
+timeout 60 python -m repro.launch.train --arch mlp --prox --lambda 0.12 \
+    --hidden 100 --epochs 6 --train-n 2000 --test-n 500 --recover 30 \
+    --compress-out /tmp/train_smoke \
+    --compress-config algorithm=fp prune_tol=-1e-6 weight_sharing=false \
+    snr_offset_db=-12
+python -c "import json; s = json.load(open('/tmp/train_smoke/train_stats.json')); \
+p = s['pipeline']; \
+assert p['dead_groups'] >= 1, p; \
+assert p['skipped_jobs'] + p['shrunk_jobs'] >= 1, p; \
+assert s['accuracy']['compressed'] > 0.8, s['accuracy']; \
+assert s['accuracy']['fused'] > 0.8, s['accuracy']; \
+assert s['recover']['loss_last'] < s['recover']['loss_first'], s['recover']; \
+assert 'recovered' in s['accuracy'], s['accuracy']"
+
 echo "CI OK"

@@ -21,7 +21,7 @@ from .cost import LayerCost, ModelCostReport, shared_layer_adds
 from .csd import adds_csd_matrix
 from .lcc import (LCCChain, FSProgram, LCCDecomposition, lcc_decompose,
                   lcc_decompose_slice, plan_col_slices, resolve_target_snr_db,
-                  assemble_decomposition)
+                  assemble_decomposition, expand_slice_piece, zero_slice_piece)
 from .weight_sharing import SharedLayer, cluster_columns, cluster_columns_fixed
 
 __all__ = [
@@ -40,6 +40,7 @@ __all__ = [
     "compress_conv_kernel",
     "compress_model_params",
     "prune_columns",
+    "slice_job_plan",
 ]
 
 
@@ -101,7 +102,16 @@ class CompressedDense:
 
 
 def prune_columns(w: np.ndarray, tol: float) -> tuple[np.ndarray, np.ndarray]:
-    """Drop (near-)zero columns produced by the group-lasso prox."""
+    """Drop (near-)zero columns produced by the group-lasso prox.
+
+    ``tol < 0`` selects *keep-in-place* mode: columns are not compacted (input
+    addressing stays stable, so serving needs no gather layer) and the dead
+    columns — norm <= |tol| — are instead eliminated per column slice by
+    :func:`slice_job_plan`, which skips all-dead slices and shrinks partially
+    dead ones.
+    """
+    if tol < 0:
+        return w, np.arange(w.shape[1])
     norms = np.linalg.norm(w, axis=0)
     keep = np.where(norms > tol)[0]
     if keep.size == 0:
@@ -143,7 +153,10 @@ def prepare_dense(name: str, w: np.ndarray, cfg: CompressionConfig) -> PreparedD
     shared: SharedLayer | None = None
     target = wp
     pre_agg = 0
-    if cfg.weight_sharing and wp.shape[1] > 2:
+    # keep-in-place pruning (prune_tol < 0) forgoes sharing: sharing compacts
+    # inputs into codebook space, which defeats stable input addressing, and
+    # dead columns would distort the clustering
+    if cfg.weight_sharing and wp.shape[1] > 2 and cfg.prune_tol >= 0:
         if cfg.share_clusters is not None:
             labels, cents = cluster_columns_fixed(wp, cfg.share_clusters)
         else:
@@ -176,6 +189,41 @@ def prepare_dense(name: str, w: np.ndarray, cfg: CompressionConfig) -> PreparedD
     )
 
 
+def slice_job_plan(
+    prep: PreparedDense, cfg: CompressionConfig,
+) -> list[tuple[int, tuple[int, int], np.ndarray, np.ndarray | None]]:
+    """The decomposition jobs a prepared dense unit actually needs.
+
+    Returns ``(slice_index, (c0, c1), mat, keep)`` per slice that must be
+    decomposed; ``keep`` is ``None`` for a full slice, else the surviving
+    column offsets within the slice and ``mat`` is compacted to them.  Slices
+    whose columns are *all* dead are absent — they cost 0 adds and the
+    assembler drops in :func:`repro.core.lcc.zero_slice_piece`.
+
+    In drop mode (``prune_tol >= 0``) dead columns were already removed by
+    :func:`prune_columns`, so every slice is a full job and nothing here
+    changes — cache keys for non-sparse plans are bitwise-stable across this
+    refactor.  Keep-in-place mode (``prune_tol < 0``) is where dead groups
+    from regularized training become skipped/shrunk jobs.
+    """
+    jobs: list[tuple[int, tuple[int, int], np.ndarray, np.ndarray | None]] = []
+    sparse = cfg.prune_tol < 0
+    tol = abs(cfg.prune_tol)
+    for i, (c0, c1) in enumerate(prep.col_slices):
+        sub = prep.target[:, c0:c1]
+        if not sparse:
+            jobs.append((i, (c0, c1), sub, None))
+            continue
+        alive = np.where(np.linalg.norm(sub, axis=0) > tol)[0]
+        if alive.size == 0:
+            continue  # fully dead slice: skipped, 0 adds
+        if alive.size == sub.shape[1]:
+            jobs.append((i, (c0, c1), sub, None))
+        else:
+            jobs.append((i, (c0, c1), sub[:, alive], alive))
+    return jobs
+
+
 def finish_dense(
     prep: PreparedDense,
     pieces: list[LCCChain | FSProgram],
@@ -199,6 +247,12 @@ def finish_dense(
         lc.extra["kept_cols"] = int(kept.size)
         lc.extra["clusters"] = int(shared.n_clusters) if shared else None
         lc.extra["achieved_snr_db"] = dec.meta.get("achieved_snr_db")
+        if cfg.prune_tol < 0:
+            dead = int(np.sum(np.linalg.norm(prep.target, axis=0)
+                              <= abs(cfg.prune_tol)))
+        else:
+            dead = prep.weight_shape[1] - int(kept.size)
+        lc.extra["dead_groups"] = dead
         report.add(lc)
 
     eff = dec.to_dense()
@@ -224,13 +278,19 @@ def compress_dense_matrix(
     worker processes with bitwise-identical results.
     """
     prep = prepare_dense(name, w, cfg)
-    pieces = [
-        lcc_decompose_slice(prep.target[:, c0:c1], cfg.algorithm,
-                            prep.target_snr_db, s_terms=cfg.s_terms,
-                            max_factors=cfg.max_factors,
-                            max_terms_per_row=cfg.max_terms_per_row)
+    n_rows = prep.target.shape[0]
+    pieces: list[LCCChain | FSProgram] = [
+        zero_slice_piece(cfg.algorithm, n_rows, c1 - c0)
         for c0, c1 in prep.col_slices
     ]
+    for i, (c0, c1), mat, keep in slice_job_plan(prep, cfg):
+        piece = lcc_decompose_slice(mat, cfg.algorithm,
+                                    prep.target_snr_db, s_terms=cfg.s_terms,
+                                    max_factors=cfg.max_factors,
+                                    max_terms_per_row=cfg.max_terms_per_row)
+        if keep is not None:
+            piece = expand_slice_piece(piece, keep, c1 - c0)
+        pieces[i] = piece
     return finish_dense(prep, pieces, cfg, report)
 
 
@@ -258,8 +318,11 @@ def prepare_conv(name: str, kernel: np.ndarray, cfg: CompressionConfig,
     n, k, o, _ = kernel.shape
     mats = conv_fk_matrices(kernel) if cfg.conv_method == "fk" else conv_pk_matrices(kernel)
 
-    # kernel groups with all-zero rows (pruned by eq. (11) group lasso) drop out
-    ch_nonzero = [i for i in range(k) if np.abs(mats[i]).max() > cfg.prune_tol]
+    # kernel groups with all-zero rows (pruned by eq. (11) group lasso) drop
+    # out; |prune_tol| so the dense keep-in-place convention (< 0) behaves —
+    # conv channels decompose independently, so dropping dead ones never
+    # perturbs addressing
+    ch_nonzero = [i for i in range(k) if np.abs(mats[i]).max() > abs(cfg.prune_tol)]
     base_per = [adds_csd_matrix(mats[i], cfg.frac_bits) for i in range(k)]
     baseline = conv_layer_adds(base_per, n, o, cfg.conv_method, k)
     sel = ch_nonzero if channel_subsample is None else ch_nonzero[::channel_subsample]
@@ -310,6 +373,7 @@ def finish_conv(
         lc.stage_adds["pruned"] = pruned_total
         lc.stage_adds["lcc"] = lcc_total
         lc.extra["channels_nonzero"] = len(ch_nonzero)
+        lc.extra["dead_groups"] = k - len(ch_nonzero)
         lc.extra["subsampled"] = channel_subsample
         report.add(lc)
     return {"decompositions": decs, "channels_nonzero": ch_nonzero,

@@ -32,17 +32,28 @@ _EPS = 1e-12
 
 
 def group_prox_rows_np(a: np.ndarray, thresh: float) -> np.ndarray:
-    """Block soft threshold on rows (eq. (8)), numpy."""
+    """Block soft threshold on rows (eq. (8)), numpy.
+
+    ``||A_i|| = 0`` rows map to exactly 0: the prox of the zero group is the
+    zero group for any threshold, and guarding explicitly (instead of an eps
+    in the divisor) keeps the output free of NaN/Inf *and* of eps-scaled
+    round-off for structurally-pruned rows.
+    """
     a = np.asarray(a, dtype=np.float64)
     norms = np.linalg.norm(a, axis=-1, keepdims=True)
-    scale = np.maximum(1.0 - thresh / np.maximum(norms, _EPS), 0.0)
+    scale = np.where(norms > 0.0,
+                     np.maximum(1.0 - thresh / np.maximum(norms, _EPS), 0.0),
+                     0.0)
     return scale * a
 
 
 def group_prox_rows(a: jnp.ndarray, thresh: float | jnp.ndarray) -> jnp.ndarray:
-    """Block soft threshold on rows (eq. (8)), jax. Rows are the last-1 axis groups."""
+    """Block soft threshold on rows (eq. (8)), jax. Rows are the last-1 axis
+    groups.  Zero-norm rows map to exactly 0 (same guard as the numpy path)."""
     norms = jnp.sqrt(jnp.sum(a * a, axis=-1, keepdims=True))
-    scale = jnp.maximum(1.0 - thresh / jnp.maximum(norms, _EPS), 0.0)
+    scale = jnp.where(norms > 0.0,
+                      jnp.maximum(1.0 - thresh / jnp.maximum(norms, _EPS), 0.0),
+                      0.0)
     return scale * a
 
 

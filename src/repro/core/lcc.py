@@ -33,6 +33,8 @@ __all__ = [
     "resolve_target_snr_db",
     "assemble_decomposition",
     "snr_db",
+    "zero_slice_piece",
+    "expand_slice_piece",
 ]
 
 _EXP_RANGE = (-16, 15)  # signed powers of two representable by the int8 format
@@ -216,6 +218,71 @@ def _slice_nonzero(s: LCCChain | FSProgram) -> bool:
     if isinstance(s, FSProgram):
         return bool((np.asarray(s.outputs) >= 0).any())
     return any((f.sign != 0).any() for f in s.factors)
+
+
+def zero_slice_piece(algorithm: str, n_rows: int, width: int) -> LCCChain | FSProgram:
+    """The zero map [width] -> [n_rows] as a slice piece with 0 adds.
+
+    For a fully-pruned slice (every column dead) the planner skips the
+    decomposition job entirely and the reducer drops this in.  FP needs an
+    explicit all-sign-0 factor — an *empty* chain means identity, not zero.
+    FS encodes zero rows natively as ``outputs[i] = -1``.
+    """
+    if algorithm == "fs":
+        return FSProgram(n_inputs=width,
+                         nodes=np.zeros((0, 6), dtype=np.int64),
+                         outputs=np.full(n_rows, -1, dtype=np.int64))
+    return LCCChain(
+        factors=[LCCFactor(idx=np.zeros((n_rows, 1), np.int32),
+                           exp=np.zeros((n_rows, 1), np.int8),
+                           sign=np.zeros((n_rows, 1), np.int8),
+                           in_dim=width)],
+        in_dim=width)
+
+
+def expand_slice_piece(piece: LCCChain | FSProgram, keep: np.ndarray,
+                       width: int) -> LCCChain | FSProgram:
+    """Re-address a piece decomposed on a *compacted* slice back to full width.
+
+    ``keep`` lists the surviving column offsets within the slice; the piece
+    consumed a ``len(keep)``-wide input, the expanded piece consumes the full
+    ``width``-wide slice and reads only the kept columns.  Pure re-indexing —
+    adds, values, and structure are unchanged, so shrunk jobs cost exactly
+    what the compacted decomposition cost.
+    """
+    keep = np.asarray(keep, dtype=np.int64)
+    kdrop = len(keep)
+    if isinstance(piece, FSProgram):
+        n_in = piece.n_inputs
+        assert n_in == kdrop, (n_in, kdrop)
+        shift = width - kdrop
+
+        def remap(ids: np.ndarray) -> np.ndarray:
+            ids = np.asarray(ids, dtype=np.int64)
+            out = np.where(ids >= kdrop, ids + shift, ids)
+            is_input = (ids >= 0) & (ids < kdrop)
+            out = np.where(is_input, keep[np.clip(ids, 0, kdrop - 1)], out)
+            return np.where(ids < 0, ids, out)  # -1 (zero row / unary) stays
+
+        nodes = np.asarray(piece.nodes, dtype=np.int64).copy()
+        if len(nodes):
+            nodes[:, 0] = remap(nodes[:, 0])
+            nodes[:, 3] = remap(nodes[:, 3])
+        return FSProgram(n_inputs=width, nodes=nodes,
+                         outputs=remap(piece.outputs))
+    assert piece.in_dim == kdrop, (piece.in_dim, kdrop)
+    if not piece.factors:
+        # empty chain = identity on the compacted input; expanded, that is a
+        # 0-add gather of the kept columns
+        gather = LCCFactor(idx=keep.astype(np.int32).reshape(-1, 1),
+                           exp=np.zeros((kdrop, 1), np.int8),
+                           sign=np.ones((kdrop, 1), np.int8),
+                           in_dim=width)
+        return LCCChain(factors=[gather], in_dim=width)
+    first = piece.factors[0]
+    remapped = LCCFactor(idx=keep[first.idx].astype(np.int32),
+                         exp=first.exp, sign=first.sign, in_dim=width)
+    return LCCChain(factors=[remapped] + piece.factors[1:], in_dim=width)
 
 
 # --------------------------------------------------------------------------

@@ -26,7 +26,11 @@ def _kernel(a_ref, t_ref, o_ref):
     a = a_ref[...].astype(jnp.float32)  # [bg, M] — full groups
     t = t_ref[0]
     norm = jnp.sqrt(jnp.sum(a * a, axis=1, keepdims=True))
-    scale = jnp.maximum(1.0 - t / jnp.maximum(norm, 1e-12), 0.0)
+    # zero-norm rows (structurally pruned groups, or grid padding) map to
+    # exactly 0 — same guard as core.group_lasso.group_prox_rows
+    scale = jnp.where(norm > 0.0,
+                      jnp.maximum(1.0 - t / jnp.maximum(norm, 1e-12), 0.0),
+                      0.0)
     o_ref[...] = (scale * a).astype(o_ref.dtype)
 
 
@@ -37,20 +41,27 @@ def group_prox(
     block_g: int = 256,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """Block soft threshold over rows of ``a`` [G, M] with threshold ``thresh``."""
+    """Block soft threshold over rows of ``a`` [G, M] with threshold ``thresh``.
+
+    ``G`` need not tile by ``block_g``: extra rows are zero-padded to the next
+    block multiple (safe because the zero-norm guard maps zero rows to exactly
+    zero) and sliced off the output — the caller sees [G, M] in / [G, M] out
+    for any G, which is what ``optim.prox_sgd`` needs for arbitrary layers.
+    """
     g, m = a.shape
     block_g = min(block_g, g)
-    if g % block_g:
-        raise ValueError(f"G={g} must tile by block_g={block_g}")
+    g_pad = ((g + block_g - 1) // block_g) * block_g
+    ap = jnp.pad(a, ((0, g_pad - g), (0, 0))) if g_pad != g else a
     t = jnp.asarray(thresh, jnp.float32).reshape(1)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         _kernel,
-        grid=(g // block_g,),
+        grid=(g_pad // block_g,),
         in_specs=[
             pl.BlockSpec((block_g, m), lambda i: (i, 0)),
             pl.BlockSpec((1,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((block_g, m), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((g, m), a.dtype),
+        out_shape=jax.ShapeDtypeStruct((g_pad, m), a.dtype),
         interpret=resolve_interpret(interpret),
-    )(a, t)
+    )(ap, t)
+    return out[:g] if g_pad != g else out

@@ -37,7 +37,8 @@ from repro.core.compress import CompressibleConv, CompressibleDense
 from repro.core.conv_reshape import conv_fk_matrices, conv_pk_matrices
 
 __all__ = ["DenseSite", "ConvSite", "sites_for", "units_from_sites",
-           "rebind_site", "effective_conv_kernel", "FAMILY_SITE_FNS"]
+           "rebind_site", "rebind_site_traced", "effective_conv_kernel",
+           "FAMILY_SITE_FNS"]
 
 
 @dataclass(frozen=True)
@@ -107,6 +108,22 @@ def rebind_site(params, site: DenseSite | ConvSite, effective: np.ndarray):
     if site.index:
         idx = site.index if len(site.index) > 1 else site.index[0]
         leaf = jnp.asarray(arr).at[idx].set(leaf)
+    return _set_in(params, site.path, leaf)
+
+
+def rebind_site_traced(params, site: DenseSite | ConvSite, effective):
+    """jit-traceable :func:`rebind_site`: same semantics, but ``effective`` may
+    be a traced jnp array (no host round-trip), so recovery fine-tuning can
+    rebuild the loss through the rebind and differentiate w.r.t. the
+    compressed parameterization."""
+    arr = _lookup(params, site.path)
+    new = effective
+    if isinstance(site, DenseSite) and site.transpose:
+        new = jnp.swapaxes(new, -1, -2)
+    leaf = new.astype(arr.dtype)
+    if site.index:
+        idx = site.index if len(site.index) > 1 else site.index[0]
+        leaf = arr.at[idx].set(leaf)
     return _set_in(params, site.path, leaf)
 
 

@@ -16,7 +16,97 @@ import jax.numpy as jnp
 from repro.core.group_lasso import group_prox_rows
 
 __all__ = ["sgd", "adamw", "prox_sgd", "global_norm", "clip_by_global_norm",
-           "step_decay", "cosine_warmup", "Optimizer"]
+           "step_decay", "cosine_warmup", "Optimizer", "GroupSpec",
+           "spec_group_view", "spec_group_norms", "apply_spec_prox"]
+
+
+@dataclass(frozen=True)
+class GroupSpec:
+    """One regularized leaf and its group layout (derived from the same
+    compression adapters the pipeline slices, see
+    ``repro.training.regularize.site_group_specs``).
+
+    kind:
+      ``in_rows``          stored [..., K, N] (``dense_init`` layout): groups
+                           are the input neurons = rows of the stored leaf;
+      ``in_cols``          stored [..., N, K] (the paper's y = W x layout):
+                           groups are columns of the stored leaf;
+      ``conv_in_channels`` conv kernel [N, K, O, O]: groups are input channels
+                           (the eq. (11) FK/PK row stacking — all rows of
+                           input channel k share one group).
+    """
+
+    name: str
+    path: tuple
+    lam: float
+    kind: str
+
+
+def spec_group_view(leaf: jnp.ndarray, kind: str) -> jnp.ndarray:
+    """Reshape a leaf so groups are rows of a 2-D [G, M] view (invertible by
+    :func:`_spec_unview` with the original shape)."""
+    if kind == "in_rows":
+        return leaf.reshape(-1, leaf.shape[-1])
+    if kind == "in_cols":
+        swapped = jnp.swapaxes(leaf, -1, -2)
+        return swapped.reshape(-1, swapped.shape[-1])
+    if kind == "conv_in_channels":
+        moved = jnp.moveaxis(leaf, 1, 0)  # [K, N, O, O]
+        return moved.reshape(moved.shape[0], -1)
+    raise ValueError(f"unknown group kind {kind!r}")
+
+
+def _spec_unview(a2: jnp.ndarray, kind: str, shape: tuple) -> jnp.ndarray:
+    if kind == "in_rows":
+        return a2.reshape(shape)
+    if kind == "in_cols":
+        swapped_shape = shape[:-2] + (shape[-1], shape[-2])
+        return jnp.swapaxes(a2.reshape(swapped_shape), -1, -2)
+    if kind == "conv_in_channels":
+        moved = a2.reshape((shape[1], shape[0]) + shape[2:])
+        return jnp.moveaxis(moved, 0, 1)
+    raise ValueError(f"unknown group kind {kind!r}")
+
+
+def spec_group_norms(leaf: jnp.ndarray, kind: str) -> jnp.ndarray:
+    """Per-group l2 norms [G] of a leaf under a spec's group layout."""
+    a2 = spec_group_view(leaf.astype(jnp.float32), kind)
+    return jnp.sqrt(jnp.sum(a2 * a2, axis=-1))
+
+
+def apply_spec_prox(leaf: jnp.ndarray, kind: str, thresh,
+                    use_kernel: bool = True,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """Block soft threshold on a leaf's groups.  ``use_kernel=True`` routes
+    through the fused ``kernels.group_prox`` Pallas kernel (interpret-mode
+    fallback off-TPU via ``kernels.dispatch.resolve_interpret``)."""
+    a2 = spec_group_view(leaf, kind)
+    if use_kernel:
+        from repro.kernels.group_prox import group_prox
+
+        out = group_prox(a2, thresh, interpret=interpret)
+    else:
+        out = group_prox_rows(a2, thresh)
+    return _spec_unview(out, kind, leaf.shape)
+
+
+def _tree_get(tree, path):
+    for k in path:
+        tree = tree[k]
+    return tree
+
+
+def _tree_set(tree, path, value):
+    if not path:
+        return value
+    k, rest = path[0], path[1:]
+    if isinstance(tree, list):
+        out = list(tree)
+        out[k] = _tree_set(tree[k], rest, value)
+        return out
+    out = dict(tree)
+    out[k] = _tree_set(tree[k], rest, value)
+    return out
 
 
 @dataclass(frozen=True)
@@ -80,18 +170,37 @@ def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
 
 
 def prox_sgd(momentum: float = 0.9,
-             prox_spec: dict[str, tuple[float, str]] | None = None) -> Optimizer:
+             prox_spec: dict[str, tuple[float, str]] | None = None,
+             specs: tuple[GroupSpec, ...] | list[GroupSpec] = (),
+             use_kernel: bool = True,
+             interpret: bool | None = None) -> Optimizer:
     """Paper eq. (7): SGD step then block soft threshold on regularized weights.
 
-    prox_spec: {path-substring: (lambda, mode)}, mode in {"columns", "rows"} —
-    which axis forms the groups ("columns" = input neurons, the dense-layer
-    choice of Sec. III-B).  Threshold = lr * lambda (the eq. (8) scaling).
+    Two ways to name the regularized groups:
+
+    * ``specs`` — structured :class:`GroupSpec` records (one per leaf, exact
+      path + group layout), normally derived from the compression adapters via
+      ``repro.training.regularize.site_group_specs`` so ProxSGD regularizes
+      exactly the groups the compressor will slice.  The prox runs through the
+      fused ``kernels.group_prox`` Pallas kernel (``use_kernel=False`` falls
+      back to the plain jnp path; ``interpret`` overrides kernel dispatch).
+    * ``prox_spec`` — the legacy substring form {path-substring:
+      (lambda, mode)}, mode in {"columns", "rows"} ("columns" = input neurons,
+      the dense-layer choice of Sec. III-B), applied to 2-D leaves only.
+
+    Threshold = lr * lambda (the eq. (8) scaling) in both forms.
     """
     base = sgd(momentum)
     spec = prox_spec or {}
+    specs = tuple(specs)
 
     def update(grads, state, params, lr):
         params, state = base.update(grads, state, params, lr)
+        for gs in specs:
+            leaf = _tree_get(params, gs.path)
+            leaf = apply_spec_prox(leaf, gs.kind, lr * gs.lam,
+                                   use_kernel=use_kernel, interpret=interpret)
+            params = _tree_set(params, gs.path, leaf)
         if not spec:
             return params, state
         flat = jax.tree_util.tree_flatten_with_path(params)

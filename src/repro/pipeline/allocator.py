@@ -45,20 +45,33 @@ __all__ = ["candidate_ladder", "allocate_budget"]
 _SNR_CAP_DB = 120.0  # exact reconstructions report inf; cap for arithmetic
 
 
+def _prune_at_least(base_tol: float, floor: float) -> float:
+    """Raise the pruning threshold magnitude to ``floor``, preserving the
+    keep-in-place convention (negative tolerance, see
+    ``core.compress.prune_columns``)."""
+    mag = max(abs(base_tol), floor)
+    return -mag if base_tol < 0 else mag
+
+
 def candidate_ladder(base: CompressionConfig) -> list[CompressionConfig]:
     """Cheap->rich per-unit plans derived from ``base``.
 
     level 0  FS at -9 dB, aggressive pruning, sharing always accepted — the
              adds floor;
-    level 1  FS at -4.5 dB with the base structural knobs;
-    level 2  ``base`` itself (CSD-matched fidelity — the paper's operating
+    level 1  sparsity-first: the base knobs with group-lasso-scale pruning —
+             for regularized-trained weights this harvests dead groups (0-add
+             skips in the prune-aware planner) before spending on FP terms;
+    level 2  FS at -4.5 dB with the base structural knobs;
+    level 3  ``base`` itself (CSD-matched fidelity — the paper's operating
              point);
-    level 3  one extra matching-pursuit term per row at +3 dB — the fidelity
+    level 4  one extra matching-pursuit term per row at +3 dB — the fidelity
              ceiling, for units the budget lets run rich.
     """
     return [
         replace(base, algorithm="fs", snr_offset_db=base.snr_offset_db - 9.0,
-                prune_tol=max(base.prune_tol, 1e-4), max_share_rel_err=None),
+                prune_tol=_prune_at_least(base.prune_tol, 1e-4),
+                max_share_rel_err=None),
+        replace(base, prune_tol=_prune_at_least(base.prune_tol, 1e-3)),
         replace(base, algorithm="fs", snr_offset_db=base.snr_offset_db - 4.5),
         base,
         replace(base, s_terms=base.s_terms + 1,

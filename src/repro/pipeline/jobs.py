@@ -20,10 +20,12 @@ from dataclasses import asdict, dataclass
 
 import numpy as np
 
+from dataclasses import field as _field
+
 from repro.core.compress import (CompressibleConv, CompressibleDense,
                                  CompressionConfig, PreparedConv,
                                  PreparedDense, conv_channel_decompose,
-                                 prepare_conv, prepare_dense)
+                                 prepare_conv, prepare_dense, slice_job_plan)
 from repro.core.lcc import lcc_decompose_slice
 
 from .cache import job_key
@@ -53,6 +55,9 @@ class SliceJob:
     mat: np.ndarray
     knobs: dict
     cache_key: str
+    keep: np.ndarray | None = None  # shrunk dense job: surviving column
+                                    # offsets within the slice; mat is
+                                    # compacted to them
 
 
 @dataclass
@@ -63,6 +68,9 @@ class PlannedUnit:
     prep: PreparedDense | PreparedConv
     jobs: list[SliceJob]
     prep_wall_s: float
+    skipped: list[int] = _field(default_factory=list)  # all-dead slice indices
+    shrunk: int = 0  # jobs compacted to surviving columns
+    dead_groups: int = 0  # dead columns (dense) / channels (conv) detected
 
 
 def execute_job(kind: str, mat: np.ndarray, knobs: dict):
@@ -122,8 +130,24 @@ class Planner:
                 if prep is None:
                     prep = prepare_dense(u.name, u.weight, cfg)
                 jobs = []
+                skipped: list[int] = []
+                shrunk = 0
+                dead = 0
+                entries = slice_job_plan(prep, cfg)
+                have = {e[0] for e in entries}
                 for si, (c0, c1) in enumerate(prep.col_slices):
-                    mat = np.ascontiguousarray(prep.target[:, c0:c1])
+                    if si not in have:
+                        skipped.append(si)
+                        dead += c1 - c0
+                        if emit:
+                            emit("skip", unit=u.name,
+                                 detail=f"slice {si}: all {c1 - c0} columns "
+                                        "dead, 0 adds")
+                for si, (c0, c1), mat, keep in entries:
+                    mat = np.ascontiguousarray(mat)
+                    if keep is not None:
+                        shrunk += 1
+                        dead += (c1 - c0) - int(keep.size)
                     knobs = {"algorithm": cfg.algorithm,
                              "target_snr_db": prep.target_snr_db,
                              "s_terms": cfg.s_terms,
@@ -132,7 +156,8 @@ class Planner:
                     jobs.append(SliceJob(
                         job_id=jid, unit=u.name, kind="dense_slice", index=si,
                         mat=mat, knobs=knobs,
-                        cache_key=job_key(mat, {"kind": "dense_slice", **knobs})))
+                        cache_key=job_key(mat, {"kind": "dense_slice", **knobs}),
+                        keep=keep))
                     jid += 1
                 kind = "dense"
             elif isinstance(u, CompressibleConv):
@@ -140,6 +165,12 @@ class Planner:
                     prep = prepare_conv(u.name, u.kernel, cfg,
                                         self.conv_channel_subsample)
                 jobs = []
+                skipped = []
+                shrunk = 0
+                dead = prep.kernel_shape[1] - len(prep.ch_nonzero)
+                if dead and emit:
+                    emit("skip", unit=u.name,
+                         detail=f"{dead} dead input channels dropped, 0 adds")
                 cfg_d = asdict(cfg)
                 knobs = {k: cfg_d[k] for k in _CONV_KNOBS}
                 for ch in prep.sel:
@@ -156,7 +187,8 @@ class Planner:
             self.prep_memo[token] = prep
             planned.append(PlannedUnit(
                 name=u.name, kind=kind, cfg=cfg, prep=prep, jobs=jobs,
-                prep_wall_s=(time.time() - t0) if fresh else 0.0))
+                prep_wall_s=(time.time() - t0) if fresh else 0.0,
+                skipped=skipped, shrunk=shrunk, dead_groups=dead))
         # bound the memo: a budget search probes ~20 configs per unit, and a
         # prepared unit can hold a full-matrix target — evict oldest (prepare
         # is recomputable; eviction only costs a re-cluster on a rare revisit).

@@ -211,8 +211,25 @@ def _reduce(planned, results, walls, conv_channel_subsample, emit,
             rec, row = memoized
             report.add(row)
         elif pu.kind == "dense":
-            pieces = [results[j.job_id] for j in sorted(pu.jobs,
-                                                        key=lambda j: j.job_id)]
+            from repro.core.lcc import expand_slice_piece, zero_slice_piece
+
+            # rebuild by slice index: skipped (all-dead) slices get the
+            # canonical zero piece, shrunk jobs are re-addressed to full slice
+            # width — both pure functions of the plan, so the reduction stays
+            # bitwise-deterministic at any worker count
+            n_rows = pu.prep.target.shape[0]
+            by_index: dict[int, object] = {}
+            for j in sorted(pu.jobs, key=lambda j: j.job_id):
+                piece = results[j.job_id]
+                if j.keep is not None:
+                    c0, c1 = pu.prep.col_slices[j.index]
+                    piece = expand_slice_piece(piece, j.keep, c1 - c0)
+                by_index[j.index] = piece
+            pieces = [
+                by_index[si] if si in by_index
+                else zero_slice_piece(pu.cfg.algorithm, n_rows, c1 - c0)
+                for si, (c0, c1) in enumerate(pu.prep.col_slices)
+            ]
             rec = finish_dense(pu.prep, pieces, pu.cfg, report)
             row = report.layers[-1]
         else:
@@ -354,6 +371,9 @@ def run_pipeline(
         "units": len(planned),
         "jobs": len(all_jobs),
         "workers": n_workers,
+        "dead_groups": sum(pu.dead_groups for pu in planned),
+        "skipped_jobs": sum(len(pu.skipped) for pu in planned),
+        "shrunk_jobs": sum(pu.shrunk for pu in planned),
         "cache_hits": cache.hits - h0,
         "cache_misses": cache.misses - m0,
         "wall_s": round(wall, 4),

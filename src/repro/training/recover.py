@@ -1,0 +1,239 @@
+"""Post-compression recovery fine-tuning on a :class:`CompressedModel`.
+
+The paper's eq. (9) retrains tied (shared) weights after clustering; Deep
+Compression shows the same prune -> retrain loop is where most of the
+compression ratio survives.  Here recovery runs *after* LCC decomposition, on
+the artifact itself: the frozen shift-add chains stay bitwise-fixed and a
+trainable **dense residual in codebook space** rides on top.
+
+Per dense unit the residual ``delta`` has shape [N, C] where C is the packed
+decomposition's input width — the shared codebook size for weight-shared
+sites, the kept-column count otherwise.  The training-time effective map is
+
+    W_eff = W_frozen + delta[:, labels]        (shared: cluster-tied, eq. (9))
+    W_eff = W_frozen + delta                   (unshared)
+
+built through ``compress_adapters.rebind_site_traced`` so the loss is the
+family's own forward on the rebound params; gradients flow straight through
+the frozen base to ``delta`` (the straight-through estimator — the chains act
+as a constant).  For shared sites ``delta[:, labels]`` makes every column of a
+cluster share one residual column, so its gradient is the *sum over the
+cluster* — exactly the tied-weight gradient of eq. (9).
+
+``write_back`` sparsifies the trained residual under an adds budget (CSD
+adds of the residual <= ``residual_frac`` x the unit's LCC adds), then writes
+it into every artifact surface at once — ``records[*].effective``, an extra
+dense slice on the packed decomposition (``apply_packed_decomposition`` sums
+dense slices on top of the fused chains, so serving is exact), the
+dense-effective ``params``, and the cost report (``stage_adds['recover']``).
+``ServingEngine(artifact=...)`` then serves the recovered model unchanged.
+
+Note: ``CompressedDense.apply`` (the numpy decomposition-only reference path)
+does not see the residual; the artifact's effective/params/packed surfaces —
+everything serving reads — do.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compress import CompressedDense
+from repro.core.csd import adds_csd_matrix
+from repro.models import compress_adapters
+from repro.optim.optimizers import adamw
+
+__all__ = ["RecoverState", "recoverable_sites", "make_recover_step",
+           "recover_artifact", "write_back"]
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class RecoverState:
+    deltas: dict[str, jnp.ndarray]  # unit name -> [N, C] codebook-space residual
+    opt_state: Any
+    step: int
+
+
+def recoverable_sites(artifact) -> list[tuple[Any, CompressedDense]]:
+    """Dense sites of the artifact's family that have a compressed record —
+    the units recovery can fine-tune (conv records stay frozen)."""
+    sites = compress_adapters.sites_for(artifact.params, artifact.config)
+    out = []
+    for s in sites:
+        rec = artifact.records.get(s.name)
+        if isinstance(s, compress_adapters.DenseSite) and \
+                isinstance(rec, CompressedDense):
+            out.append((s, rec))
+    return out
+
+
+def _site_weight_traced(params, site) -> jnp.ndarray:
+    """Traced mirror of ``DenseSite.weight``: the [N, K] y = W x view."""
+    a = params
+    for k in site.path:
+        a = a[k]
+    for i in site.index:
+        a = a[i]
+    return jnp.swapaxes(a, -1, -2) if site.transpose else a
+
+
+def _expand_delta(delta: jnp.ndarray, rec: CompressedDense,
+                  k_orig: int) -> jnp.ndarray:
+    """[N, C] codebook residual -> [N, K_orig] original input space."""
+    dk = delta[:, jnp.asarray(np.asarray(rec.shared.labels), jnp.int32)] \
+        if rec.shared is not None else delta
+    kept = jnp.asarray(np.asarray(rec.kept_columns), jnp.int32)
+    if kept.shape[0] == k_orig:
+        return dk  # keep-in-place pruning / nothing pruned
+    return jnp.zeros((delta.shape[0], k_orig), delta.dtype).at[:, kept].set(dk)
+
+
+def _codebook_width(rec: CompressedDense) -> int:
+    return (rec.shared.n_clusters if rec.shared is not None
+            else int(rec.kept_columns.size))
+
+
+def init_deltas(artifact) -> dict[str, jnp.ndarray]:
+    return {s.name: jnp.zeros((rec.effective.shape[0], _codebook_width(rec)),
+                              jnp.float32)
+            for s, rec in recoverable_sites(artifact)}
+
+
+def make_recover_step(artifact, loss_fn: Callable, *, lr: float = 1e-3,
+                      optimizer=None):
+    """Build ``(state0, step)`` for recovery fine-tuning.
+
+    ``loss_fn(params, batch) -> scalar`` is the family's own training loss
+    (e.g. ``models.mlp.mlp_loss``-style); it sees params with every
+    recoverable site rebound to ``frozen + delta``.  Only the deltas train.
+    """
+    sites = recoverable_sites(artifact)
+    base_params = artifact.params
+    k_orig = {s.name: int(np.asarray(s.weight(base_params)).shape[1])
+              for s, _ in sites}
+    opt = optimizer if optimizer is not None else adamw()
+    deltas0 = init_deltas(artifact)
+    state0 = RecoverState(deltas=deltas0, opt_state=opt.init(deltas0), step=0)
+
+    def rebound(deltas):
+        params = base_params
+        for s, rec in sites:
+            w = _site_weight_traced(params, s)
+            d = _expand_delta(deltas[s.name], rec, k_orig[s.name])
+            params = compress_adapters.rebind_site_traced(params, s, w + d)
+        return params
+
+    def loss_of(deltas, batch):
+        return loss_fn(rebound(deltas), batch)
+
+    @jax.jit
+    def _jstep(state: RecoverState, batch):
+        loss, grads = jax.value_and_grad(loss_of)(state.deltas, batch)
+        deltas, opt_state = opt.update(grads, state.opt_state, state.deltas, lr)
+        return RecoverState(deltas=deltas, opt_state=opt_state,
+                            step=state.step + 1), loss
+
+    def step(state: RecoverState, batch) -> tuple[RecoverState, jnp.ndarray]:
+        return _jstep(state, batch)
+
+    step.rebound_params = rebound  # for eval during/after recovery
+    return state0, step
+
+
+def _sparsify_to_budget(d: np.ndarray, max_adds: int, frac_bits: int
+                        ) -> np.ndarray:
+    """Zero small residual entries until the residual's CSD adds fit
+    ``max_adds`` (coarse quantile search — the residual is a correction, not
+    a reconstruction, so precision of the cut is not critical)."""
+    if adds_csd_matrix(d, frac_bits) <= max_adds:
+        return d
+    mags = np.abs(d[d != 0.0])
+    for q in (50.0, 75.0, 87.5, 93.75, 96.9, 98.4, 99.2, 99.6, 99.8):
+        cut = np.percentile(mags, q)
+        trial = np.where(np.abs(d) >= cut, d, 0.0)
+        if adds_csd_matrix(trial, frac_bits) <= max_adds:
+            return trial
+    return np.zeros_like(d)
+
+
+def write_back(artifact, deltas: dict[str, jnp.ndarray], *,
+               residual_frac: float = 0.15) -> dict:
+    """Write trained residuals into every artifact surface (in place).
+
+    The residual is sparsified so its shift-add cost stays below
+    ``residual_frac`` of the unit's LCC adds, then applied identically to
+    ``records[name].effective``, the packed decomposition (extra dense slice
+    over the full codebook span), and the dense-effective ``params``; the
+    report gains ``stage_adds['recover']`` per touched unit.  Returns a
+    summary dict per unit.
+    """
+    rows = {lc.name: lc for lc in artifact.report.layers}
+    summary: dict[str, dict] = {}
+    for site, rec in recoverable_sites(artifact):
+        d = np.asarray(deltas.get(site.name), np.float64) \
+            if site.name in deltas else None
+        if d is None or not np.any(d):
+            continue
+        cfg = artifact.unit_config_for(site.name)
+        lcc_adds = rec.decomposition.num_adds()
+        budget = max(1, int(residual_frac * max(lcc_adds, 1)))
+        d = _sparsify_to_budget(d, budget, cfg.frac_bits)
+        r_adds = adds_csd_matrix(d, cfg.frac_bits)
+        nnz = int(np.count_nonzero(d))
+        if nnz == 0:
+            summary[site.name] = {"nnz": 0, "recover_adds": 0}
+            continue
+
+        # records: effective is kept-column space
+        dk = d[:, rec.shared.labels] if rec.shared is not None else d
+        rec.effective = rec.effective + dk
+
+        # packed: one extra dense slice spanning the whole codebook input
+        pk = artifact.packed.get(site.name)
+        if pk is not None:
+            extra = ((0, pk.in_dim), jnp.asarray(d, jnp.float32))
+            artifact.packed[site.name] = replace(pk, dense=pk.dense + (extra,))
+
+        # params: re-derive the dense-effective leaf from the updated record
+        # (zero-expanded, exactly like api.compress_model built it) so params
+        # and records stay bitwise-consistent after the single f64->f32 cast
+        w = site.weight(artifact.params)
+        full = np.zeros_like(w)
+        full[:, rec.kept_columns] = rec.effective
+        artifact.params = compress_adapters.rebind_site(
+            artifact.params, site, full)
+
+        row = rows.get(site.name)
+        if row is not None:
+            row.stage_adds["recover"] = int(row.stage_adds.get("lcc", 0)) + r_adds
+            row.stage_bytes["recover"] = 6 * nnz  # int16 (r,c) + po2 code
+            row.extra["recovered"] = True
+        summary[site.name] = {"nnz": nnz, "recover_adds": int(r_adds),
+                              "lcc_adds": int(lcc_adds)}
+    return summary
+
+
+def recover_artifact(artifact, loss_fn: Callable, batches, *,
+                     lr: float = 1e-3, optimizer=None,
+                     residual_frac: float = 0.15,
+                     progress: Callable | None = None) -> dict:
+    """Fine-tune an artifact's residuals over ``batches`` and write back.
+
+    ``batches`` is any iterable of loss-fn batches (one optimizer step each).
+    Returns {"losses": [...], "units": write_back summary}.  The artifact is
+    updated in place; save it again to persist the recovered values.
+    """
+    state, step = make_recover_step(artifact, loss_fn, lr=lr,
+                                    optimizer=optimizer)
+    losses: list[float] = []
+    for i, batch in enumerate(batches):
+        state, loss = step(state, batch)
+        losses.append(float(loss))
+        if progress is not None and (i % 20 == 0):
+            progress(f"recover step {i}: loss {losses[-1]:.5f}")
+    units = write_back(artifact, state.deltas, residual_frac=residual_frac)
+    return {"losses": losses, "units": units}

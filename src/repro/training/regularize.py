@@ -1,0 +1,93 @@
+"""Compression-aware regularization: ProxSGD group layouts from the adapters.
+
+The paper's Algorithm-1 step 1 (group-lasso regularized training) only pays
+off if the groups the prox zeroes are *exactly* the groups the compressor
+later slices: dense columns = input neurons (Sec. III-B) and conv input
+channels under the eq. (11) FK/PK row stacking.  Those groups are already
+enumerated once, per family, by ``models.compress_adapters`` — this module
+derives :class:`repro.optim.optimizers.GroupSpec` records from the same site
+registry, so training and compression can never disagree about the layout.
+
+Also the per-site sparsity/group-norm report: a traceable summary emitted
+into the train state every step (``sparsity_report``), and a host-side
+detailed view for drivers (``detailed_group_report``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.optimizers import GroupSpec, spec_group_norms
+
+__all__ = ["site_group_specs", "sparsity_report", "detailed_group_report",
+           "dead_group_fraction"]
+
+
+def site_group_specs(params, cfg, lam: float,
+                     include=None) -> tuple[GroupSpec, ...]:
+    """One :class:`GroupSpec` per regularized *leaf*, derived from the
+    family's compression-adapter sites.
+
+    Stacked sites (layer/expert axes) share a leaf, so they collapse into one
+    spec whose group view covers every stacked copy at once — the prox is the
+    same row-wise operator either way.  ``include`` filters site names
+    (callable or prefix string), mirroring ``api.compress_model``.
+    """
+    from repro.models import compress_adapters
+
+    sites = compress_adapters.sites_for(params, cfg)
+    if include is not None:
+        keep = include if callable(include) else lambda n: n.startswith(include)
+        sites = [s for s in sites if keep(s.name)]
+    specs: list[GroupSpec] = []
+    seen: set[tuple] = set()
+    for s in sites:
+        if s.path in seen:
+            continue  # stacked siblings share the leaf: one spec covers all
+        seen.add(s.path)
+        if isinstance(s, compress_adapters.ConvSite):
+            kind = "conv_in_channels"
+        else:
+            kind = "in_rows" if s.transpose else "in_cols"
+        name = "/".join(str(k) for k in s.path)
+        specs.append(GroupSpec(name=name, path=s.path, lam=lam, kind=kind))
+    return tuple(specs)
+
+
+def sparsity_report(params, specs) -> dict:
+    """Traceable per-site summary for the train state: per spec the group
+    count, exact-zero ("dead") group count, and the group-norm statistics the
+    eq. (6) penalty is made of.  Scalars only, so checkpoints stay small."""
+    report = {}
+    for gs in specs:
+        leaf = params
+        for k in gs.path:
+            leaf = leaf[k]
+        norms = spec_group_norms(leaf, gs.kind)
+        report[gs.name] = {
+            "groups": jnp.asarray(norms.shape[0], jnp.int32),
+            "dead": jnp.sum(norms == 0.0).astype(jnp.int32),
+            "min_norm": jnp.min(norms),
+            "mean_norm": jnp.mean(norms),
+            "penalty": gs.lam * jnp.sum(norms),
+        }
+    return report
+
+
+def dead_group_fraction(report: dict) -> float:
+    """Fraction of exactly-zero groups across every reported site."""
+    dead = sum(int(v["dead"]) for v in report.values())
+    total = sum(int(v["groups"]) for v in report.values())
+    return dead / max(total, 1)
+
+
+def detailed_group_report(params, specs) -> dict[str, np.ndarray]:
+    """Host-side full per-group norms (numpy) per spec name, for drivers that
+    want the whole distribution rather than the train-state scalars."""
+    out = {}
+    for gs in specs:
+        leaf = params
+        for k in gs.path:
+            leaf = leaf[k]
+        out[gs.name] = np.asarray(spec_group_norms(jnp.asarray(leaf), gs.kind))
+    return out

@@ -36,30 +36,40 @@ class TrainState:
     opt_state: Any
     step: jnp.ndarray
     error_fb: Any | None = None  # gradient-compression residuals
+    prox_report: Any | None = None  # per-site sparsity/group-norm summary
 
 
 def init_train_state(key, cfg: ArchConfig, optimizer: Optimizer,
-                     grad_compression: bool = False, n_pods: int = 2) -> TrainState:
+                     grad_compression: bool = False, n_pods: int = 2,
+                     prox_specs=None) -> TrainState:
     params = api.init_params(key, cfg)
     opt_state = optimizer.init(params)
     # error-feedback residuals are PER POD (leading pod axis, sharded on "pod")
     efb = jax.tree.map(lambda p: jnp.zeros((n_pods,) + p.shape, jnp.float32), params) \
         if grad_compression else None
+    # the initial report fixes the state's tree structure so checkpoint
+    # templates and the jitted step agree from step 0
+    report = None
+    if prox_specs:
+        from repro.training.regularize import sparsity_report
+        report = sparsity_report(params, prox_specs)
     return TrainState(params=params, opt_state=opt_state,
-                      step=jnp.zeros((), jnp.int32), error_fb=efb)
+                      step=jnp.zeros((), jnp.int32), error_fb=efb,
+                      prox_report=report)
 
 
 def abstract_train_state(cfg: ArchConfig, optimizer: Optimizer,
-                         grad_compression: bool = False):
+                         grad_compression: bool = False, prox_specs=None):
     return jax.eval_shape(
         lambda: init_train_state(jax.random.PRNGKey(0), cfg, optimizer,
-                                 grad_compression))
+                                 grad_compression, prox_specs=prox_specs))
 
 
 def make_train_step(cfg: ArchConfig, optimizer: Optimizer, *,
                     lr: float = 3e-4, grad_clip: float = 1.0,
                     accum_steps: int = 1, grad_compression: bool = False,
-                    mesh: Mesh | None = None, unroll: bool = False):
+                    mesh: Mesh | None = None, unroll: bool = False,
+                    prox_specs=None):
     """Returns step(state, batch) -> (state, metrics). jit-able / pjit-ready.
 
     With ``accum_steps > 1`` the batch's leading dim must be divisible; the
@@ -90,9 +100,16 @@ def make_train_step(cfg: ArchConfig, optimizer: Optimizer, *,
     def apply_update(state: TrainState, loss, grads):
         grads, gnorm = clip_by_global_norm(grads, grad_clip)
         params, opt_state = optimizer.update(grads, state.opt_state, state.params, lr)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        report = state.prox_report
+        if prox_specs:
+            from repro.training.regularize import sparsity_report
+            report = sparsity_report(params, prox_specs)
+            metrics["dead_groups"] = sum(v["dead"] for v in report.values())
+            metrics["prox_penalty"] = sum(v["penalty"] for v in report.values())
         new = TrainState(params=params, opt_state=opt_state, step=state.step + 1,
-                         error_fb=state.error_fb)
-        return new, {"loss": loss, "grad_norm": gnorm}
+                         error_fb=state.error_fb, prox_report=report)
+        return new, metrics
 
     if not grad_compression:
         def step(state: TrainState, batch):
@@ -133,7 +150,8 @@ def make_train_step(cfg: ArchConfig, optimizer: Optimizer, *,
                               check_vma=False, axis_names=frozenset({"pod"}))
         grads, new_efb = fn(grads, state.error_fb)
         state = TrainState(params=state.params, opt_state=state.opt_state,
-                           step=state.step, error_fb=new_efb)
+                           step=state.step, error_fb=new_efb,
+                           prox_report=state.prox_report)
         return apply_update(state, losses.mean(), grads)
 
     return step

@@ -305,3 +305,25 @@ def test_factor_stream_roundtrip():
         # stream size ~= the 3-bytes-per-term model (+1/row +12 header)
         nnz = int((f.sign != 0).sum())
         assert len(blob) == 12 + f.out_dim + 3 * nnz
+
+
+def test_group_prox_zero_rows_boundary_unaligned():
+    """Parity with ``group_prox_rows_np`` on the hard cases: zero-norm rows
+    (exact 0 out, no NaN), rows at/near the threshold boundary, and a group
+    count that is not a block multiple (the wrapper pads and slices)."""
+    from repro.core.group_lasso import group_prox_rows_np
+
+    rng = np.random.default_rng(5)
+    a = rng.standard_normal((37, 16))
+    a[[3, 17, 36]] = 0.0  # structurally-pruned groups
+    a[5] *= 2.0 / np.linalg.norm(a[5])     # exactly at the threshold
+    a[9] *= 1.995 / np.linalg.norm(a[9])   # just under -> zeroed
+    a[11] *= 2.005 / np.linalg.norm(a[11])  # just over -> survives, tiny
+    af = np.asarray(a, np.float32)
+    got = np.asarray(group_prox(jnp.asarray(af), 2.0))
+    want = group_prox_rows_np(af, 2.0)
+    assert np.isfinite(got).all()
+    assert (got[[3, 17, 36]] == 0.0).all()
+    assert (got[9] == 0.0).all()
+    assert np.abs(got[11]).max() > 0.0
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)

@@ -296,3 +296,49 @@ def test_resume_after_sigkill_matches_uninterrupted(tmp_path):
     # the resumed run actually reused the killed run's work
     stats = json.loads((killed_dir / "stats.json").read_text())
     assert stats["cache_hits"] >= 4
+
+
+# ------------------------------------------------- prune-aware slice plans
+
+
+def test_sparse_plan_bitwise_identical_and_stats():
+    """Keep-in-place pruning (prune_tol < 0): all-dead slices are skipped
+    (0-add zero pieces), partially-dead slices shrink to their live columns —
+    and the result is bitwise identical across serial, parallel, and the
+    direct Algorithm-1 call, with the dead groups accounted in the stats."""
+    rng = np.random.default_rng(7)
+    w = rng.standard_normal((24, 40))
+    dead = rng.choice(40, 17, replace=False)
+    w[:, dead] = 0.0  # prox-style exactly-dead input groups
+    units = [CompressibleDense(name="sparse", weight=w),
+             CompressibleDense(name="full",
+                               weight=rng.standard_normal((24, 40)))]
+    cfg = CompressionConfig(algorithm="fp", weight_sharing=False,
+                            prune_tol=-1e-9)
+
+    ref_rep = ModelCostReport()
+    ref = {u.name: compress_dense_matrix(u.name, u.weight, cfg, ref_rep)
+           for u in units}
+    serial = run_pipeline(units, cfg, n_workers=1)
+    parallel = run_pipeline(units, cfg, n_workers=2)
+    _assert_records_bitwise(ref, serial.records)
+    _assert_records_bitwise(ref, parallel.records)
+    assert _report_rows(ref_rep) == _report_rows(serial.report) \
+        == _report_rows(parallel.report)
+
+    rec = serial.records["sparse"]
+    assert np.array_equal(rec.kept_columns, np.arange(40))  # keep-in-place
+    assert (rec.effective[:, dead] == 0.0).all()  # dead columns stay exact 0
+    for res in (serial, parallel):
+        assert res.stats["dead_groups"] >= 17
+        assert res.stats["skipped_jobs"] + res.stats["shrunk_jobs"] >= 1
+    assert serial.stats["skipped_jobs"] == parallel.stats["skipped_jobs"]
+    assert serial.stats["shrunk_jobs"] == parallel.stats["shrunk_jobs"]
+
+
+def test_drop_mode_stats_unchanged():
+    """Drop-mode pruning (prune_tol >= 0) keeps its original slice jobs:
+    nothing skipped or shrunk, cache keys bitwise-stable."""
+    res = run_pipeline(_units(n_dense=2), _cfg(), n_workers=1)
+    assert res.stats["skipped_jobs"] == 0
+    assert res.stats["shrunk_jobs"] == 0

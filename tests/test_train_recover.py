@@ -1,0 +1,159 @@
+"""The paper's closed loop on a small MLP: prox-regularized training ->
+prune-aware compression -> post-compression recovery fine-tuning, with the
+serving surfaces (dense-effective params, records, packed kernels) asserted
+consistent at every stage."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CompressionConfig
+from repro.core.artifact import CompressedModel
+from repro.models import api
+from repro.models.mlp import MLPConfig, init_mlp, mlp_forward, mlp_loss
+from repro.optim.optimizers import prox_sgd
+from repro.training import regularize
+from repro.training.recover import recover_artifact, recoverable_sites
+
+IN, HID, CLS = 64, 32, 4
+
+
+def _data(n=256, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, IN)).astype(np.float32)
+    x[:, IN // 2:] *= 0.05  # weak features -> prunable input groups
+    wt = rng.standard_normal((CLS, IN))
+    wt[:, IN // 2:] = 0.0  # labels ignore the weak half entirely
+    y = np.argmax(x @ wt.T, axis=1).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """Prox-trained small MLP with structurally-dead fc1 input groups."""
+    cfg = MLPConfig(in_dim=IN, hidden=HID, classes=CLS)
+    x, y = _data()
+    params = init_mlp(jax.random.PRNGKey(0), in_dim=IN, hidden=HID,
+                      classes=CLS)
+    specs = regularize.site_group_specs(params, cfg, 0.2, include="fc1")
+    opt = prox_sgd(momentum=0.9, specs=specs)
+    state = opt.init(params)
+    grad = jax.jit(jax.grad(mlp_loss))
+    upd = jax.jit(lambda g, s, p, l: opt.update(g, s, p, l))
+    for _ in range(300):
+        g = grad(params, x, y)
+        params, state = upd(g, state, params, 0.05)
+    return cfg, params, (x, y), specs
+
+
+@pytest.fixture(scope="module")
+def artifact(trained):
+    cfg, params, _, _ = trained
+    comp = CompressionConfig(algorithm="fp", weight_sharing=False,
+                             prune_tol=-1e-6, snr_offset_db=-6.0)
+    return api.compress_model(params, cfg, comp)
+
+
+def test_prox_training_kills_weak_groups(trained):
+    _, params, _, specs = trained
+    rep = regularize.sparsity_report(params, specs)
+    assert regularize.dead_group_fraction(rep) > 0.2
+    # the dead groups are (mostly) the weak input half
+    norms = regularize.detailed_group_report(params, specs)["fc1/w"]
+    assert (norms[IN // 2:] == 0.0).sum() > (norms[: IN // 2] == 0.0).sum()
+
+
+def test_round_trip_decodes_against_dense_effective(trained, artifact):
+    """Train -> compress -> serve: the fused whole-chain kernel decodes the
+    prox-trained artifact to <= 1e-4 of its dense-effective forward."""
+    from repro.kernels import ops
+
+    _, params, (x, _), _ = trained
+    art = artifact
+    assert art.pipeline_stats["dead_groups"] >= 1
+    assert art.pipeline_stats["skipped_jobs"] \
+        + art.pipeline_stats["shrunk_jobs"] >= 1
+
+    rec = art.records["fc1"]
+    # keep-in-place pruning: nothing compacted, dead columns exactly zero
+    assert np.array_equal(rec.kept_columns, np.arange(IN))
+    w_eff = np.asarray(art.params["fc1"]["w"])
+    assert w_eff.tobytes() == np.asarray(rec.effective, w_eff.dtype).tobytes()
+    dead = np.linalg.norm(np.asarray(params["fc1"]["w"]), axis=0) == 0.0
+    assert (w_eff[:, dead] == 0.0).all()
+
+    # fused kernel vs dense-effective matmul
+    fused = np.asarray(ops.apply_packed_decomposition(
+        art.packed["fc1"], jnp.asarray(x).T))
+    want = w_eff @ np.asarray(x).T
+    assert np.abs(fused - want).max() <= 1e-4
+
+    # end-to-end logits through the dense-effective params stay close to the
+    # uncompressed model (fidelity is the compressor's SNR contract)
+    base = np.asarray(mlp_forward(params, x))
+    comp = np.asarray(mlp_forward(art.params, x))
+    assert np.abs(base - comp).max() < 0.5
+
+
+def test_recovery_improves_loss_and_stays_consistent(trained, artifact):
+    """Recovery fine-tuning lowers the training loss with chains frozen, and
+    write_back keeps every serving surface identical."""
+    from repro.kernels import ops
+
+    _, _, (x, y), _ = trained
+    art = artifact
+    assert {s.name for s, _ in recoverable_sites(art)} == {"fc1", "fc2"}
+    chains_before = {n: art.records[n].decomposition.to_dense().tobytes()
+                     for n in ("fc1", "fc2")}
+
+    def loss_fn(p, b):
+        return mlp_loss(p, b[0], b[1])
+
+    res = recover_artifact(art, loss_fn, [(x, y)] * 40, lr=5e-3,
+                           residual_frac=0.6)
+    assert res["losses"][-1] < res["losses"][0]  # straight-through helps
+    touched = [n for n, u in res["units"].items() if u["nnz"] > 0]
+    assert touched  # the residual actually trained and survived sparsify
+
+    # frozen chains are bitwise untouched; only the residual surfaces moved
+    for n in ("fc1", "fc2"):
+        assert art.records[n].decomposition.to_dense().tobytes() \
+            == chains_before[n]
+    for n in touched:
+        row = next(l for l in art.report.layers if l.name == n)
+        assert "recover" in row.stage_adds
+        assert row.extra.get("recovered") is True
+
+    # packed (fused serving), records, and params all agree post-write-back
+    w_eff = np.asarray(art.params["fc1"]["w"])
+    assert w_eff.tobytes() == np.asarray(
+        art.records["fc1"].effective, w_eff.dtype).tobytes()
+    fused = np.asarray(ops.apply_packed_decomposition(
+        art.packed["fc1"], jnp.asarray(x).T))
+    assert np.abs(fused - w_eff @ np.asarray(x).T).max() <= 1e-4
+
+
+def test_recovered_artifact_round_trips_to_disk(trained, artifact):
+    """The recovered values (records + packed residual slice + params)
+    survive save/load — ServingEngine(artifact=...) serves them unchanged."""
+    from repro.kernels import ops
+
+    _, _, (x, _), _ = trained
+    art = artifact  # already recovered by the previous test (module fixture)
+    with tempfile.TemporaryDirectory() as d:
+        art.save(d)
+        back = CompressedModel.load(d)
+    for a, b in zip(jax.tree_util.tree_leaves(art.params),
+                    jax.tree_util.tree_leaves(back.params)):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+    assert back.records["fc1"].effective.tobytes() \
+        == art.records["fc1"].effective.tobytes()
+    assert len(back.packed["fc1"].dense) == len(art.packed["fc1"].dense)
+    fused = np.asarray(ops.apply_packed_decomposition(
+        back.packed["fc1"], jnp.asarray(x).T))
+    want = np.asarray(back.params["fc1"]["w"]) @ np.asarray(x).T
+    assert np.abs(fused - want).max() <= 1e-4
+    rows = {l.name: l for l in back.report.layers}
+    assert any("recover" in l.stage_adds for l in rows.values())
