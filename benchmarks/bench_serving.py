@@ -9,6 +9,17 @@ section whose experts apply their chains in one grouped dispatch per layer.
 Each compressed row also reports the paper's Table-1 additions metric
 (``models.flops.compressed_adds``).
 
+Two paged-KV sections ride on the same engines:
+
+* ``poisson`` — an arrival-trace mode: requests arrive by a Poisson process
+  whose rate is calibrated to ~60% of the engine's measured service rate, and
+  the scheduler admits them continuously (no drain between requests).  Reports
+  sustained req/s and p50/p99 end-to-end latency, dense vs compressed, at
+  ``n_slots=8``.
+* ``prefix_cache`` — cold vs warm prefill for a block-aligned prompt: the warm
+  repeat is a full prefix-cache hit (zero forward passes), so its latency is
+  pure admission bookkeeping.
+
     PYTHONPATH=src python benchmarks/bench_serving.py [--smoke] [--out FILE]
 
 CPU-container numbers measure the serving loop's dispatch/transfer overhead
@@ -68,6 +79,106 @@ def bench_engine(make_engine, *, n_slots: int, prompt_len: int,
             "decode_tok_s": round(tok_s, 2),
             "prefill_ms": round(prefill_s * 1e3, 2),
             "step_dispatches": eng.step_dispatches}
+
+
+def bench_poisson(make_engine, *, n_slots: int, n_requests: int,
+                  prompt_len: int, max_new: int, utilization: float = 0.6,
+                  seed: int = 0) -> dict:
+    """Drive a Poisson arrival trace through the continuous-batching
+    scheduler; wall-clock end-to-end latency per request."""
+    import numpy as np
+
+    from repro.data.synthetic import MarkovLM
+    from repro.serving.scheduler import Scheduler
+
+    eng = make_engine(n_slots)
+    lm = MarkovLM(vocab=eng.cfg.vocab, k=8, seed=1)
+    # warm + calibrate: two full rounds through every slot — the first pays
+    # compilation, the second measures the true service rate (prefill +
+    # decode + host-side block bookkeeping)
+    for r in range(2):
+        t0 = time.time()
+        for i in range(n_slots):
+            p = lm.sample(1, prompt_len,
+                          seed=7 + r * n_slots + i)[0, :prompt_len].tolist()
+            eng.submit(p, max_new=max_new)
+        while eng.active.any():
+            eng.step()
+        round_s = time.time() - t0
+    rate = utilization * n_slots / round_s
+
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+    prompts = [lm.sample(1, prompt_len, seed=1000 + i)[0, :prompt_len].tolist()
+               for i in range(n_requests)]
+    sched = Scheduler(eng)
+    done_at: dict[int, float] = {}
+    enq: dict[int, float] = {}  # scheduler rid -> arrival time
+    batch_drains = 0
+    i = 0
+    t0 = time.time()
+    while len(done_at) < n_requests:
+        now = time.time() - t0
+        while i < n_requests and arrivals[i] <= now:
+            enq[sched.enqueue(prompts[i], max_new=max_new)] = arrivals[i]
+            i += 1
+        if not (sched.pending or sched.inflight or eng.active.any()):
+            batch_drains += 1  # idle gap in the trace: sleep to next arrival
+            time.sleep(max(0.0, arrivals[i] - (time.time() - t0)))
+            continue
+        for ev in sched.step():
+            if ev.finished:
+                done_at[ev.rid] = time.time() - t0
+    wall = time.time() - t0
+    res = [sched.take_result(r) for r in sorted(enq)]
+    lat_ms = np.array([(done_at[r] - enq[r]) * 1e3 for r in sorted(enq)])
+    return {"n_slots": n_slots, "n_requests": n_requests,
+            "prompt_len": prompt_len, "max_new": max_new,
+            "offered_req_s": round(rate, 2),
+            "sustained_req_s": round(n_requests / wall, 2),
+            "latency_p50_ms": round(float(np.percentile(lat_ms, 50)), 1),
+            "latency_p99_ms": round(float(np.percentile(lat_ms, 99)), 1),
+            "latency_mean_ms": round(float(lat_ms.mean()), 1),
+            "errors": sum(r.error is not None for r in res),
+            "batch_drains": batch_drains,
+            "continuous_admissions": sched.admitted_while_running,
+            "mem_stalls": sched.mem_stalls,
+            "peak_kv_blocks": (eng.pool_stats() or {}).get(
+                "peak_in_use_blocks")}
+
+
+def bench_prefix(make_engine, *, prompt_len: int) -> dict | None:
+    """Cold vs warm prefill latency for a repeated block-aligned prompt.
+    The warm submit is a full prefix-cache hit — no forward pass at all."""
+    from repro.data.synthetic import MarkovLM
+
+    eng = make_engine(2)
+    if eng.pool is None or not eng.pool.prefix_cache:
+        return None
+    lm = MarkovLM(vocab=eng.cfg.vocab, k=8, seed=2)
+    bs = eng.pool.block_size
+    plen = -(-prompt_len // bs) * bs  # full blocks: the repeat hits end-to-end
+
+    def timed_submit(p):
+        t0 = time.time()
+        eng.submit(p, max_new=2)
+        jax.block_until_ready(eng.state)
+        dt = time.time() - t0
+        while eng.active.any():
+            eng.step()
+        return dt
+
+    timed_submit(lm.sample(1, plen, seed=5)[0, :plen].tolist())  # compile the bucket
+    prompt = lm.sample(1, plen, seed=6)[0, :plen].tolist()
+    cold = timed_submit(prompt)
+    warm = timed_submit(prompt)
+    s = eng.pool_stats()
+    return {"prompt_len": plen, "block_size": bs,
+            "cold_prefill_ms": round(cold * 1e3, 2),
+            "warm_prefill_ms": round(warm * 1e3, 2),
+            "speedup": round(cold / warm, 1),
+            "prefix_hit_tokens": s["prefix_hit_tokens"],
+            "leaked_blocks": s["in_use_blocks"]}
 
 
 def main() -> None:
@@ -140,6 +251,28 @@ def main() -> None:
     for n_slots in (1, 8):
         for mode, make in makers.items():
             run(mode, make, n_slots, arch=cfg.name)
+
+    # Poisson arrival trace through the continuous-batching scheduler
+    n_req, trace_new = (10, 6) if args.smoke else (32, 12)
+    poisson = []
+    for mode in ("dense", "compressed"):
+        row = {"mode": mode, **bench_poisson(
+            makers[mode], n_slots=8, n_requests=n_req,
+            prompt_len=prompt_len, max_new=trace_new)}
+        poisson.append(row)
+        print(f"{cfg.name:>12} {mode:>16} poisson: "
+              f"{row['sustained_req_s']} req/s sustained "
+              f"(offered {row['offered_req_s']}), "
+              f"p50 {row['latency_p50_ms']} ms, p99 {row['latency_p99_ms']} ms, "
+              f"{row['continuous_admissions']} continuous admissions")
+
+    # prefix cache: repeated prompt prefills from cached blocks
+    prefix = bench_prefix(makers["dense"], prompt_len=4 * prompt_len)
+    if prefix:
+        print(f"{cfg.name:>12} {'prefix-cache':>16}: "
+              f"cold {prefix['cold_prefill_ms']} ms -> "
+              f"warm {prefix['warm_prefill_ms']} ms "
+              f"({prefix['speedup']}x)")
     # MoE: all experts of a layer apply their chains in ONE grouped dispatch
     for mode, make in (
             ("dense", lambda n: ServingEngine(params_moe, cfg_moe, n_slots=n,
@@ -165,6 +298,8 @@ def main() -> None:
             "moe": flops.compressed_adds(cfg_moe, artifact_moe),
         },
         "results": results,
+        "poisson": poisson,
+        "prefix_cache": prefix,
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)

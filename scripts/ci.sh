@@ -24,7 +24,36 @@ modes = {(x['arch'], x['mode']) for x in r['results']}; \
 assert all(x['decode_tok_s'] > 0 for x in r['results']); \
 assert any(m == 'compressed+attn' for _, m in modes), modes; \
 assert ('mixtral-8x22b', 'compressed') in modes, modes; \
-assert all(v['ratio'] > 1 for v in r['adds'].values()), r['adds']"
+assert all(v['ratio'] > 1 for v in r['adds'].values()), r['adds']; \
+assert all(p['errors'] == 0 for p in r['poisson']), r['poisson']; \
+assert r['prefix_cache']['speedup'] >= 2, r['prefix_cache']; \
+assert r['prefix_cache']['leaked_blocks'] == 0, r['prefix_cache']"
+
+echo "== paged KV prefix-sharing smoke (60s budget) =="
+# two requests sharing a system prompt: the second must prefill from cached
+# pool blocks (>= 1 prefix hit) and shutdown must leak zero blocks
+timeout 60 python - <<'EOF'
+import jax
+from repro.configs import get_arch, reduced_config
+from repro.models import api
+from repro.serving.engine import ServingEngine
+from repro.serving.scheduler import Scheduler
+cfg = reduced_config(get_arch("olmo-1b"), d_model=32, n_heads=2, n_kv_heads=2,
+                     head_dim=16, d_ff=48, vocab=64, n_layers=2)
+params = api.init_params(jax.random.PRNGKey(0), cfg)
+eng = ServingEngine(params, cfg, n_slots=2, max_len=64, kv_block=8)
+sched = Scheduler(eng)
+system = [(5 * i + 3) % cfg.vocab for i in range(16)]  # shared system prompt
+rids = [sched.enqueue(system + t, max_new=4) for t in ([7, 8], [9, 10, 11])]
+sched.run()
+res = [sched.take_result(r) for r in rids]
+assert all(r.finished and r.error is None for r in res), res
+s = eng.pool_stats()
+assert s["prefix_hit_blocks"] >= 1, s
+assert s["in_use_blocks"] == 0, s
+print(f"prefix smoke OK: {s['prefix_hit_blocks']} blocks "
+      f"({s['prefix_hit_tokens']} tokens) served from cache, zero leaks")
+EOF
 
 echo "== compression pipeline bench smoke (120s budget) =="
 timeout 120 python benchmarks/bench_compress_pipeline.py --smoke \

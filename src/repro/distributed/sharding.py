@@ -133,18 +133,24 @@ def decode_state_pspecs(state_tree: Any, mesh: Mesh):
     contiguous in time, while a time-sharded cache forces a collective on
     every decode-step append.  Integer leaves (kpos-style position maps) stay
     replicated beyond the batch axis — they are tiny and feed mask math on
-    every shard."""
+    every shard.
+
+    Paged pools keep the same rule by construction: their layout is
+    [L, n_blocks, bs, ...], so axis 1 — the pool axis, padded to a multiple
+    of 8 — shards over ("pod","data") exactly the way slots do.  The shared
+    ``block_tbl`` [B, view_blocks] is the one path-keyed exception: every
+    shard's gather needs the full table, so it is replicated."""
     baxes = _batch_axes(mesh)
     bsize = int(np.prod([mesh_axis_size(mesh, a) for a in ("pod", "data")]))
     dsize = mesh_axis_size(mesh, "data")
     msize = mesh_axis_size(mesh, "model")
 
-    def one(leaf):
+    def one(name, leaf):
         shape = tuple(leaf.shape)
-        if len(shape) <= 1:
+        if "block_tbl" in name or len(shape) <= 1:
             return P()
         spec: list = [None] * len(shape)
-        b_ax = 1  # [L, B, ...] layout everywhere
+        b_ax = 1  # [L, B, ...] / paged [L, Nb, ...] layout everywhere
         if shape[b_ax] % bsize == 0 and shape[b_ax] >= bsize:
             spec[b_ax] = baxes
         elif shape[b_ax] % dsize == 0 and shape[b_ax] >= dsize:
@@ -158,7 +164,11 @@ def decode_state_pspecs(state_tree: Any, mesh: Mesh):
             spec[mi] = "model"
         return P(*spec)
 
-    return jax.tree_util.tree_map(one, state_tree)
+    paths_leaves = jax.tree_util.tree_flatten_with_path(state_tree)[0]
+    flat = [one("/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path),
+                leaf) for path, leaf in paths_leaves]
+    treedef = jax.tree_util.tree_structure(state_tree)
+    return jax.tree_util.tree_unflatten(treedef, flat)
 
 
 def named(mesh: Mesh, spec_tree):

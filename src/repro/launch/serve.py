@@ -52,6 +52,16 @@ def main() -> None:
     ap.add_argument("--tp", type=int, default=1, help="tensor-parallel mesh axis")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as they are sampled")
+    ap.add_argument("--kv-block", type=int, default=16,
+                    help="paged-KV block size in tokens; 0 = contiguous "
+                         "per-slot slabs (attention families only)")
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="total usable KV pool blocks (default: one full "
+                         "view per slot, i.e. contiguous-equivalent memory)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="share prefilled prompt-prefix blocks across "
+                         "requests (copy-on-write; paged engines only)")
     args = ap.parse_args()
     if args.kernel and not args.compress:
         ap.error("--kernel routes a compressed artifact; pass --compress too")
@@ -72,15 +82,17 @@ def main() -> None:
     lm = MarkovLM(vocab=cfg.vocab, k=8, seed=0)
     prompts = [lm.sample(1, 8, seed=100 + i)[0, :8].tolist()
                for i in range(args.requests)]
+    kv = dict(kv_block=args.kv_block or None, kv_blocks=args.kv_blocks,
+              prefix_cache=args.prefix_cache)
     if artifact is not None:
         eng = ServingEngine(artifact=artifact, n_slots=args.slots, max_len=128,
                             temperature=args.temperature,
                             use_kernel=args.kernel,
-                            mesh=build_mesh(args.dp, args.tp))
+                            mesh=build_mesh(args.dp, args.tp), **kv)
     else:
         eng = ServingEngine(params, cfg, n_slots=args.slots, max_len=128,
                             temperature=args.temperature,
-                            mesh=build_mesh(args.dp, args.tp))
+                            mesh=build_mesh(args.dp, args.tp), **kv)
     sched = Scheduler(eng)
     on_token = ((lambda rid, tok: print(f"  req{rid} += {tok}", flush=True))
                 if args.stream else None)
@@ -101,6 +113,15 @@ def main() -> None:
              else jax.default_backend())
     print(f"{tok} tokens in {dt:.1f}s ({tok / dt:.1f} tok/s, "
           f"{args.slots} slots, {eng.step_dispatches} dispatches, {where})")
+    ps = eng.pool_stats()
+    if ps:
+        print(f"kv pool: {ps['n_blocks']} blocks x {ps['block_size']} tok, "
+              f"peak {ps['peak_in_use_blocks']} in use, "
+              f"prefix hit-rate {ps['prefix_hit_rate']:.2f} "
+              f"({ps['prefix_hit_tokens']} tok), {ps['cow_copies']} COW, "
+              f"{ps['evictions']} evictions, "
+              f"{sched.admitted_while_running} continuous admissions, "
+              f"{sched.mem_stalls} block stalls")
 
 
 if __name__ == "__main__":

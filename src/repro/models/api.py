@@ -21,6 +21,7 @@ from repro.configs.base import ArchConfig, ShapeCell
 from . import transformer, whisper
 
 __all__ = ["init_params", "abstract_params", "train_loss", "prefill", "decode",
+           "prefill_extend", "paged_supported", "paged_layout",
            "init_decode_state", "abstract_decode_state", "sample_tokens",
            "family_of", "register_compress_adapter", "compressible_units",
            "rebind", "compress_model"]
@@ -83,10 +84,37 @@ def sample_tokens(logits, keys, temperature):
     return jnp.where(temperature > 0.0, sampled, greedy)
 
 
-def init_decode_state(cfg: ArchConfig, batch: int, smax: int):
+def paged_supported(cfg: ArchConfig) -> bool:
+    """True when the family's decode cache can live in a paged block pool:
+    pure-attention decoders (dense GQA / MLA).  SSM and hybrid recurrent state
+    is not a KV sequence and encoder-decoder (whisper) carries a cross cache —
+    those keep the contiguous layout."""
+    return (cfg.enc_layers == 0 and cfg.family not in ("ssm", "hybrid"))
+
+
+def paged_layout(cfg: ArchConfig, smax: int, kv_block: int,
+                 kv_blocks: int | None = None, n_slots: int = 1):
+    """(block_size, view_blocks, pool_entries) — see ``transformer.paged_layout``."""
+    return transformer.paged_layout(cfg, smax, kv_block, kv_blocks, n_slots)
+
+
+def prefill_extend(params, cfg: ArchConfig, tokens, positions, past, last, *,
+                   unroll: bool = False):
+    """Tail prefill against a resident KV prefix (prefix-cache hit path)."""
+    if not paged_supported(cfg):
+        raise ValueError(f"prefill_extend: family {cfg.family!r} is not paged")
+    return transformer.forward_extend(params, cfg, tokens, positions, past,
+                                      last, unroll=unroll)
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, smax: int, *,
+                      kv_block: int | None = None, kv_blocks: int | None = None):
     if cfg.enc_layers > 0:
         return whisper.init_decode_state(cfg, batch, enc_len=smax)
-    return transformer.init_decode_state(cfg, batch, smax)
+    if not paged_supported(cfg):
+        kv_block = kv_blocks = None  # contiguous fallback (ssm/hybrid state)
+    return transformer.init_decode_state(cfg, batch, smax, kv_block=kv_block,
+                                         kv_blocks=kv_blocks)
 
 
 def abstract_decode_state(cfg: ArchConfig, cell: ShapeCell):

@@ -29,12 +29,16 @@ __all__ = [
     "init_attention",
     "attention_prefill",
     "attention_decode",
+    "attention_extend",
     "KVCache",
+    "PagedKVCache",
     "init_kv_cache",
     "init_mla",
     "mla_prefill",
     "mla_decode",
+    "mla_extend",
     "MLACache",
+    "PagedMLACache",
 ]
 
 _NEG = -1e30
@@ -44,6 +48,46 @@ class KVCache(NamedTuple):
     k: jnp.ndarray  # [B, Smax, Hkv, Dh]  (ring buffer if windowed)
     v: jnp.ndarray  # [B, Smax, Hkv, Dh]
     kpos: jnp.ndarray  # [B, Smax] absolute positions (-1 = empty)
+
+
+class PagedKVCache(NamedTuple):
+    """Paged KV: one block pool per layer plus per-row block tables.
+
+    ``k``/``v`` are the pool slice for this layer; ``tbl[b, j]`` names the
+    pool block backing row ``b``'s logical blocks (0 = the reserved null
+    block — unallocated, masked out via ``kpos == -1``).  The logical view
+    (``tbl`` gathered and flattened) has exactly the contiguous cache's
+    layout, so attention math — and its numerics — are unchanged."""
+    k: jnp.ndarray  # [Nb, bs, Hkv, Dh] block pool (this layer)
+    v: jnp.ndarray  # [Nb, bs, Hkv, Dh]
+    kpos: jnp.ndarray  # [B, S] logical positions (-1 = empty), S = mb * bs
+    tbl: jnp.ndarray  # [B, mb] int32 block ids
+
+
+class PagedMLACache(NamedTuple):
+    c_kv: jnp.ndarray  # [Nb, bs, dc] latent block pool (this layer)
+    k_rope: jnp.ndarray  # [Nb, bs, Dr]
+    kpos: jnp.ndarray  # [B, S]
+    tbl: jnp.ndarray  # [B, mb]
+
+
+def paged_view(pool: jnp.ndarray, tbl: jnp.ndarray) -> jnp.ndarray:
+    """Gather a pool ``[Nb, bs, ...]`` through block tables ``[B, mb]`` into
+    the contiguous logical view ``[B, mb * bs, ...]``."""
+    b, mb = tbl.shape
+    bs = pool.shape[1]
+    return pool[tbl].reshape(b, mb * bs, *pool.shape[2:])
+
+
+def _paged_scatter(pool: jnp.ndarray, tbl: jnp.ndarray, slot: jnp.ndarray,
+                   vals: jnp.ndarray) -> jnp.ndarray:
+    """Write one token per row into the pool at logical view position
+    ``slot`` ([B], -1 = no write -> routed to the null block)."""
+    bs = pool.shape[1]
+    w = jnp.maximum(slot, 0)
+    bidx = jnp.take_along_axis(tbl, (w // bs)[:, None], axis=1)[:, 0]
+    bidx = jnp.where(slot >= 0, bidx, 0)  # inactive rows sink to null block 0
+    return pool.at[bidx, w % bs].set(vals)
 
 
 def init_kv_cache(batch: int, smax: int, n_kv: int, head_dim: int, dtype) -> KVCache:
@@ -176,8 +220,15 @@ def attention_decode(
     ``executor``/``site`` (compressed serving): q/k/v/o route through the
     executor's fused LCC kernels — q/k/v as ONE grouped launch (they share the
     input) — for sites named ``site.format(proj)``; uncovered sites stay
-    dense."""
+    dense.
+
+    ``cache`` may be a :class:`PagedKVCache`: keys/values then live in a block
+    pool indexed through per-row block tables.  The gathered logical view has
+    the contiguous layout (same positions, same mask math), and the new token
+    is additionally scattered into its pool block so the pool — not the view —
+    is the carried state."""
     b = x.shape[0]
+    paged = isinstance(cache, PagedKVCache)
     sn = site_fmt(site)
     if cross:
         q_raw = site_linear(executor, sn("q"), p["q"], x)
@@ -194,6 +245,7 @@ def attention_decode(
 
     if cross:
         new_cache = cache
+        k, v, kpos = cache.k, cache.v, cache.kpos
     else:
         k_new = k_raw.reshape(b, 1, n_kv, head_dim)
         v_new = v_raw.reshape(b, 1, n_kv, head_dim)
@@ -201,17 +253,23 @@ def attention_decode(
             k_new = apply_rope(k_new, pos[:, None], rope_theta)
         elif mrope_sections is not None:
             k_new = apply_mrope(k_new, mrope_positions, mrope_sections)
-        smax = cache.k.shape[1]
+        k_cur = paged_view(cache.k, cache.tbl) if paged else cache.k
+        v_cur = paged_view(cache.v, cache.tbl) if paged else cache.v
+        smax = k_cur.shape[1]
         # negative pos (serving's inactive-slot sentinel) must stay out of the
         # ring too: plain pos would wrap -1 % smax onto a live cache entry
         slot = jnp.where(pos >= 0, pos % smax, -1) if window is not None else pos
-        onehot = jax.nn.one_hot(slot, smax, dtype=cache.k.dtype)  # [B, Smax]
-        k = cache.k * (1 - onehot)[..., None, None] + onehot[..., None, None] * k_new
-        v = cache.v * (1 - onehot)[..., None, None] + onehot[..., None, None] * v_new
+        onehot = jax.nn.one_hot(slot, smax, dtype=k_cur.dtype)  # [B, Smax]
+        k = k_cur * (1 - onehot)[..., None, None] + onehot[..., None, None] * k_new
+        v = v_cur * (1 - onehot)[..., None, None] + onehot[..., None, None] * v_new
         kpos = jnp.where(onehot > 0, pos[:, None], cache.kpos)
-        new_cache = KVCache(k=k, v=v, kpos=kpos)
-
-    k, v, kpos = new_cache.k, new_cache.v, new_cache.kpos
+        if paged:
+            new_cache = PagedKVCache(
+                k=_paged_scatter(cache.k, cache.tbl, slot, k_new[:, 0]),
+                v=_paged_scatter(cache.v, cache.tbl, slot, v_new[:, 0]),
+                kpos=kpos, tbl=cache.tbl)
+        else:
+            new_cache = KVCache(k=k, v=v, kpos=kpos)
     g = n_heads // n_kv
     qg = q.reshape(b, 1, n_kv, g, head_dim)
     if cross:
@@ -224,6 +282,35 @@ def attention_decode(
     out = _sdpa(qg, k, v, mask)
     out = out.reshape(b, 1, n_heads * head_dim)
     return site_linear(executor, sn("o"), p["o"], out.astype(x.dtype)), new_cache
+
+
+def attention_extend(p, x, positions, past_k, past_v, past_kpos, *,
+                     n_heads: int, n_kv: int, head_dim: int,
+                     rope_theta: float | None = 10000.0):
+    """Prefill continuation against a resident KV prefix (prefix-cache hit).
+
+    ``x`` [B,T,d] are the unmatched tail tokens at absolute ``positions``
+    [B,T]; ``past_k``/``past_v`` [B,C,Hkv,Dh] is the gathered prefix (already
+    rotary-encoded at its own positions, exactly as the pool stores it) with
+    validity mask ``past_kpos`` [B,C] (-1 = padding).  Returns
+    ``(out [B,T,d], k_tail, v_tail)`` — only the tail K/V, for scatter into
+    freshly allocated blocks.  Causal, non-windowed."""
+    b, t, _ = x.shape
+    g = n_heads // n_kv
+    q = linear(p["q"], x).reshape(b, t, n_heads, head_dim)
+    k_t = linear(p["k"], x).reshape(b, t, n_kv, head_dim)
+    v_t = linear(p["v"], x).reshape(b, t, n_kv, head_dim)
+    if rope_theta is not None:
+        q = apply_rope(q, positions, rope_theta)
+        k_t = apply_rope(k_t, positions, rope_theta)
+    k = jnp.concatenate([past_k, k_t], axis=1)
+    v = jnp.concatenate([past_v, v_t], axis=1)
+    kpos = jnp.concatenate([past_kpos, positions], axis=1)  # [B, C+T]
+    valid = (kpos[:, None, :] >= 0) & (kpos[:, None, :] <= positions[:, :, None])
+    mask = jnp.where(valid, 0.0, _NEG)[:, None, None]  # [B,1,1,T,C+T]
+    qg = q.reshape(b, t, n_kv, g, head_dim)
+    out = _sdpa(qg, k, v, mask).reshape(b, t, n_heads * head_dim)
+    return linear(p["o"], out.astype(x.dtype)), k_t, v_t
 
 
 # ---------------------------------------------------------------------------
@@ -318,16 +405,28 @@ def mla_prefill(p, x, positions, *, n_heads, kv_lora, qk_nope, qk_rope, v_dim,
 
 def mla_decode(p, x, cache: MLACache, pos, *, n_heads, kv_lora, qk_nope, qk_rope,
                v_dim, rope_theta=10000.0, executor=None, site: str | None = None):
+    """``cache`` may be a :class:`PagedMLACache` — the latent/rope pools are
+    gathered through the block tables into the contiguous logical view and the
+    new latent is scattered back into its pool block (cf. attention_decode)."""
     b = x.shape[0]
+    paged = isinstance(cache, PagedMLACache)
     sn = site_fmt(site)
-    smax = cache.c_kv.shape[1]
+    c_cur = paged_view(cache.c_kv, cache.tbl) if paged else cache.c_kv
+    kr_cur = paged_view(cache.k_rope, cache.tbl) if paged else cache.k_rope
+    smax = c_cur.shape[1]
     c_new, kr_new = site_linear_group(executor, (sn("dkv"), sn("kr")),
                                       (p["dkv"], p["kr"]), x)  # [B,1,dc/Dr]
-    onehot = jax.nn.one_hot(pos, smax, dtype=cache.c_kv.dtype)
-    c_kv = cache.c_kv * (1 - onehot)[..., None] + onehot[..., None] * c_new
-    k_rope = cache.k_rope * (1 - onehot)[..., None] + onehot[..., None] * kr_new
+    onehot = jax.nn.one_hot(pos, smax, dtype=c_cur.dtype)
+    c_kv = c_cur * (1 - onehot)[..., None] + onehot[..., None] * c_new
+    k_rope = kr_cur * (1 - onehot)[..., None] + onehot[..., None] * kr_new
     kpos = jnp.where(onehot > 0, pos[:, None], cache.kpos)
-    new_cache = MLACache(c_kv=c_kv, k_rope=k_rope, kpos=kpos)
+    if paged:
+        new_cache = PagedMLACache(
+            c_kv=_paged_scatter(cache.c_kv, cache.tbl, pos, c_new[:, 0]),
+            k_rope=_paged_scatter(cache.k_rope, cache.tbl, pos, kr_new[:, 0]),
+            kpos=kpos, tbl=cache.tbl)
+    else:
+        new_cache = MLACache(c_kv=c_kv, k_rope=k_rope, kpos=kpos)
 
     kpositions = jnp.maximum(kpos, 0)
     q, k, v = _mla_qkv(p, x, c_kv, k_rope, pos[:, None], kpositions, n_heads,
@@ -339,3 +438,25 @@ def mla_decode(p, x, cache: MLACache, pos, *, n_heads, kv_lora, qk_nope, qk_rope
     out = _sdpa(qg, k, v, mask)
     out = out.reshape(b, 1, n_heads * v_dim)
     return site_linear(executor, sn("o"), p["o"], out.astype(x.dtype)), new_cache
+
+
+def mla_extend(p, x, positions, past_c, past_kr, past_kpos, *, n_heads,
+               qk_nope, qk_rope, v_dim, rope_theta=10000.0):
+    """MLA prefill continuation against a resident latent prefix.
+
+    ``past_c`` [B,C,dc] / ``past_kr`` [B,C,Dr] are the gathered compressed-KV
+    prefix (pool layout: pre-rope rotary branch, latent as stored), masked by
+    ``past_kpos`` [B,C].  Returns ``(out, c_tail, kr_tail)``."""
+    b, t, _ = x.shape
+    c_t = linear(p["dkv"], x)  # [B,T,dc]
+    kr_t = linear(p["kr"], x)  # [B,T,Dr]
+    c_all = jnp.concatenate([past_c, c_t], axis=1)
+    kr_all = jnp.concatenate([past_kr, kr_t], axis=1)
+    kpos = jnp.concatenate([past_kpos, positions], axis=1)  # [B, C+T]
+    q, k, v = _mla_qkv(p, x, c_all, kr_all, positions, jnp.maximum(kpos, 0),
+                       n_heads, qk_nope, qk_rope, v_dim, rope_theta)
+    valid = (kpos[:, None, :] >= 0) & (kpos[:, None, :] <= positions[:, :, None])
+    mask = jnp.where(valid, 0.0, _NEG)[:, None, None]  # [B,1,1,T,C+T]
+    qg = q.reshape(b, t, n_heads, 1, qk_nope + qk_rope)
+    out = _sdpa(qg, k, v, mask).reshape(b, t, n_heads * v_dim)
+    return linear(p["o"], out.astype(x.dtype)), c_t, kr_t

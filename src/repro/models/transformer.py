@@ -15,6 +15,7 @@ materialized.
 """
 from __future__ import annotations
 
+import math
 from typing import Any
 
 import jax
@@ -26,12 +27,16 @@ from repro.distributed.act_shard import constrain
 from .attention import (
     KVCache,
     MLACache,
+    PagedKVCache,
+    PagedMLACache,
     attention_decode,
+    attention_extend,
     attention_prefill,
     init_attention,
     init_kv_cache,
     init_mla,
     mla_decode,
+    mla_extend,
     mla_prefill,
 )
 from .layers import (dense_init, linear, non_parametric_ln, rms_norm,
@@ -47,7 +52,8 @@ from .rwkv6 import (
     rwkv6_timemix_prefill,
 )
 
-__all__ = ["init_params", "forward", "decode_step", "init_decode_state", "loss_fn"]
+__all__ = ["init_params", "forward", "decode_step", "init_decode_state",
+           "forward_extend", "paged_layout", "loss_fn"]
 
 
 def _scan(body, init, xs, unroll: bool):
@@ -356,8 +362,39 @@ def loss_fn(params, cfg: ArchConfig, batch, *, unroll: bool = False,
 # ---------------------------------------------------------------------------
 
 
-def init_decode_state(cfg: ArchConfig, batch: int, smax: int):
-    """Abstract-init-friendly per-layer decode caches (call under eval_shape too)."""
+def paged_layout(cfg: ArchConfig, smax: int, kv_block: int,
+                 kv_blocks: int | None = None, n_slots: int = 1):
+    """Resolve paged-KV geometry -> ``(block_size, view_blocks, pool_entries)``.
+
+    Windowed attention shrinks the block so it divides the ring exactly
+    (``gcd``), keeping the logical view the same length as the ring — the
+    ``pos % eff`` slot arithmetic is unchanged.  ``pool_entries`` counts the
+    reserved null block (id 0) and is rounded up to a multiple of 8 so the
+    pool axis shards evenly over small meshes; without ``kv_blocks`` the pool
+    matches the contiguous layout's token capacity (one full view per slot).
+    """
+    w = cfg.attn_window
+    eff = min(smax, w) if w is not None else smax
+    bs = math.gcd(int(kv_block), eff) if w is not None else min(int(kv_block), eff)
+    mb = -(-eff // bs)
+    usable = kv_blocks if kv_blocks is not None else n_slots * mb
+    if w is not None:
+        usable = max(usable, mb)  # a ring slot needs its whole view resident
+    entries = -(-(usable + 1) // 8) * 8
+    return bs, mb, entries
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, smax: int, *,
+                      kv_block: int | None = None,
+                      kv_blocks: int | None = None):
+    """Abstract-init-friendly per-layer decode caches (call under eval_shape too).
+
+    ``kv_block`` switches the attention families (dense GQA, MLA) to a paged
+    layout: per-layer block *pools* ``[L, pool, bs, ...]`` plus one shared
+    block table ``[batch, view_blocks]`` (see ``serving.kvpool``).  Families
+    whose state is not a KV sequence (ssm, hybrid) and encoder-decoder models
+    ignore it — they keep the contiguous layout.
+    """
     L = cfg.n_layers
     cd = cfg.cdtype
     if cfg.family == "ssm":
@@ -379,6 +416,14 @@ def init_decode_state(cfg: ArchConfig, batch: int, smax: int):
             "attn_kpos": jnp.full((n_attn, batch, smax), -1, jnp.int32),
         }
     if cfg.mla is not None:
+        if kv_block is not None:
+            bs, mb, nb = paged_layout(cfg, smax, kv_block, kv_blocks, n_slots=batch)
+            return {
+                "c_kv": jnp.zeros((L, nb, bs, cfg.mla.kv_lora), cd),
+                "k_rope": jnp.zeros((L, nb, bs, cfg.mla.qk_rope), cd),
+                "kpos": jnp.full((L, batch, mb * bs), -1, jnp.int32),
+                "block_tbl": jnp.zeros((batch, mb), jnp.int32),
+            }
         return {
             "c_kv": jnp.zeros((L, batch, smax, cfg.mla.kv_lora), cd),
             "k_rope": jnp.zeros((L, batch, smax, cfg.mla.qk_rope), cd),
@@ -386,6 +431,14 @@ def init_decode_state(cfg: ArchConfig, batch: int, smax: int):
         }
     w = cfg.attn_window
     eff = min(smax, w) if w is not None else smax
+    if kv_block is not None:
+        bs, mb, nb = paged_layout(cfg, smax, kv_block, kv_blocks, n_slots=batch)
+        return {
+            "k": jnp.zeros((L, nb, bs, cfg.n_kv_heads, cfg.hd), cd),
+            "v": jnp.zeros((L, nb, bs, cfg.n_kv_heads, cfg.hd), cd),
+            "kpos": jnp.full((L, batch, mb * bs), -1, jnp.int32),
+            "block_tbl": jnp.zeros((batch, mb), jnp.int32),
+        }
     return {
         "k": jnp.zeros((L, batch, eff, cfg.n_kv_heads, cfg.hd), cd),
         "v": jnp.zeros((L, batch, eff, cfg.n_kv_heads, cfg.hd), cd),
@@ -558,12 +611,16 @@ def decode_step(params, cfg: ArchConfig, state, token, pos, *, unroll: bool = Fa
         new = {"ssm": ssm2, "conv": conv2, "attn_k": ak2, "attn_v": av2,
                "attn_kpos": akp2}
     elif cfg.mla is not None:
+        tbl = state.get("block_tbl")  # paged: closure constant across layers
+
         def body_for(li):
             ex = executor if li is not None else None
 
             def body(x, xs):
                 bp, ck, kr, kp = xs
-                cache = MLACache(c_kv=ck, k_rope=kr, kpos=kp)
+                cache = (PagedMLACache(c_kv=ck, k_rope=kr, kpos=kp, tbl=tbl)
+                         if tbl is not None
+                         else MLACache(c_kv=ck, k_rope=kr, kpos=kp))
                 y, c2 = mla_decode(
                     bp["attn"], _norm(cfg, bp["ln1"], x), cache, pos,
                     n_heads=cfg.n_heads, kv_lora=cfg.mla.kv_lora,
@@ -594,7 +651,11 @@ def decode_step(params, cfg: ArchConfig, state, token, pos, *, unroll: bool = Fa
         else:
             x, outs = _unrolled_layers(body_for, x, xs_all, cfg.n_layers)
         new = {"c_kv": outs[0], "k_rope": outs[1], "kpos": outs[2]}
+        if tbl is not None:
+            new["block_tbl"] = tbl
     else:
+        tbl = state.get("block_tbl")
+
         def body_for(li):
             ex = executor if li is not None else None
 
@@ -614,7 +675,8 @@ def decode_step(params, cfg: ArchConfig, state, token, pos, *, unroll: bool = Fa
 
             def body(x, xs):
                 bp, k, v, kp = xs
-                cache = KVCache(k=k, v=v, kpos=kp)
+                cache = (PagedKVCache(k=k, v=v, kpos=kp, tbl=tbl)
+                         if tbl is not None else KVCache(k=k, v=v, kpos=kp))
                 y, c2 = attention_decode(
                     bp["attn"], _norm(cfg, bp["ln1"], x), cache, pos,
                     n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
@@ -638,7 +700,74 @@ def decode_step(params, cfg: ArchConfig, state, token, pos, *, unroll: bool = Fa
             # unrolled layer loop: each layer binds its own kernel buffers
             x, outs = _unrolled_layers(body_for, x, xs_all, cfg.n_layers)
         new = {"k": outs[0], "v": outs[1], "kpos": outs[2]}
+        if tbl is not None:
+            new["block_tbl"] = tbl
 
     h = _norm(cfg, params["final_ln"], x)
     logits = logits_from_hidden(params, cfg, h)[:, 0]
     return logits, new
+
+
+def forward_extend(params, cfg: ArchConfig, tokens, positions, past, last, *,
+                   unroll: bool = False):
+    """Prefix-cache tail prefill: run ``tokens`` [B,T] at absolute
+    ``positions`` [B,T] attending to a resident per-layer KV prefix.
+
+    ``past`` holds the *gathered* pool views for the cached prefix —
+    dense: ``{"k","v": [L,B,C,Hkv,hd], "kpos": [L,B,C]}``; MLA:
+    ``{"c_kv","k_rope","kpos"}`` — masked by ``kpos == -1`` (so padding the
+    prefix view is harmless).  Padded tail entries carry position ``-1``:
+    they are excluded from every real query's key set and their own garbage
+    activations stay confined to their row.  ``last`` [B] indexes the final
+    real tail token.  Returns ``(logits [B,V] at ``last``, tail caches with
+    [L,B,T,...] leaves)`` — only the tail K/V, for scatter into freshly
+    allocated blocks.
+    """
+    b, t = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype)
+    blocks = params["blocks"]
+
+    def ffn_fn(bp, ffn_in):
+        if cfg.moe is not None:
+            moe_fn = moe_ffn_manual if cfg.moe_manual else moe_ffn
+            y, _ = moe_fn(bp["ffn"], ffn_in, n_experts=cfg.moe.n_experts,
+                          top_k=cfg.moe.top_k,
+                          capacity_factor=cfg.moe.capacity_factor,
+                          norm_topk=cfg.moe.norm_topk)
+            return y
+        return swiglu(bp["ffn"], ffn_in)
+
+    if cfg.mla is not None:
+        def body(x, xs):
+            bp, pc, pkr, pkp = xs
+            y, c_t, kr_t = mla_extend(
+                bp["attn"], _norm(cfg, bp["ln1"], x), positions, pc, pkr, pkp,
+                n_heads=cfg.n_heads, qk_nope=cfg.mla.qk_nope,
+                qk_rope=cfg.mla.qk_rope, v_dim=cfg.mla.v_dim,
+                rope_theta=cfg.rope_theta)
+            x = x + y
+            x = x + ffn_fn(bp, _norm(cfg, bp["ln2"], x))
+            return x, (c_t, kr_t)
+
+        x, outs = _scan(body, x, (blocks, past["c_kv"], past["k_rope"],
+                                  past["kpos"]), unroll)
+        tails = {"c_kv": outs[0], "k_rope": outs[1]}
+    else:
+        def body(x, xs):
+            bp, pk, pv, pkp = xs
+            y, k_t, v_t = attention_extend(
+                bp["attn"], _norm(cfg, bp["ln1"], x), positions, pk, pv, pkp,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                rope_theta=None if cfg.pos == "none" else cfg.rope_theta)
+            x = x + y
+            x = x + ffn_fn(bp, _norm(cfg, bp["ln2"], x))
+            return x, (k_t, v_t)
+
+        x, outs = _scan(body, x, (blocks, past["k"], past["v"], past["kpos"]),
+                        unroll)
+        tails = {"k": outs[0], "v": outs[1]}
+
+    h = x[jnp.arange(b), last][:, None]  # [B,1,d]
+    h = _norm(cfg, params["final_ln"], h)
+    logits = logits_from_hidden(params, cfg, h)[:, 0]
+    return logits, tails

@@ -49,6 +49,7 @@ from repro.configs.base import ArchConfig
 from repro.models import api
 from repro.serving.executor import (CompressedExecutor, LCCMatvec,
                                     matvecs_from_artifact)
+from repro.serving.kvpool import KVPool
 
 __all__ = ["ServingEngine", "GenerationResult", "StepEvent", "LCCMatvec",
            "CompressedExecutor", "compress_ffn_for_serving"]
@@ -83,7 +84,9 @@ class ServingEngine:
                  max_len: int = 512, eos_id: int | None = None,
                  temperature: float = 0.0, seed: int = 0,
                  use_kernel: bool = True, bulk_prefill: bool = True,
-                 interpret: bool | None = None, mesh=None):
+                 interpret: bool | None = None, mesh=None,
+                 kv_block: int | None = 16, kv_blocks: int | None = None,
+                 prefix_cache: bool = True):
         if artifact is not None:
             if cfg is None:
                 cfg = artifact.config
@@ -104,7 +107,30 @@ class ServingEngine:
         self.bulk_prefill = bulk_prefill
         self.mesh = mesh
         self._base_key = jax.random.PRNGKey(seed)
-        self.state = api.init_decode_state(cfg, n_slots, max_len)
+        # paged KV: attention families with bulk prefill keep their cache in a
+        # block pool (kv_block=None restores the contiguous per-slot slabs);
+        # ssm/hybrid recurrent state and whisper stay contiguous
+        self.paged = (kv_block is not None and bulk_prefill
+                      and api.paged_supported(cfg))
+        self.pool: KVPool | None = None
+        if self.paged:
+            bs, mb, nb = api.paged_layout(cfg, max_len, kv_block, kv_blocks,
+                                          n_slots)
+            windowed = cfg.attn_window is not None
+            self.pool = KVPool(
+                n_slots=n_slots, n_blocks=nb - 1, block_size=bs, view_blocks=mb,
+                # tail-extend prefill has no mrope path; windowed rings rewrite
+                # shared prefixes as they wrap — both disable sharing
+                prefix_cache=(prefix_cache and cfg.pos in ("rope", "none")),
+                windowed=windowed)
+            self.state = api.init_decode_state(cfg, n_slots, max_len,
+                                               kv_block=kv_block,
+                                               kv_blocks=kv_blocks)
+            self._pool_leaves = ("c_kv", "k_rope") if "c_kv" in self.state else ("k", "v")
+            self._tbl_host = np.zeros((n_slots, mb), np.int32)
+            self._extend_fns: dict[int, object] = {}
+        else:
+            self.state = api.init_decode_state(cfg, n_slots, max_len)
         # host mirrors of the device-side per-slot control state
         self.pos = np.zeros(n_slots, np.int64)
         self.active = np.zeros(n_slots, bool)
@@ -197,7 +223,24 @@ class ServingEngine:
         if len(prompt) > self.max_len:
             return (f"prompt of {len(prompt)} tokens exceeds the engine's "
                     f"max_len={self.max_len} KV cache")
+        if (self.pool is not None and not self.pool.windowed
+                and self.pool.blocks_for(len(prompt)) + 1 > self.pool.n_blocks):
+            return (f"prompt of {len(prompt)} tokens can never fit the KV "
+                    f"pool ({self.pool.n_blocks} blocks of "
+                    f"{self.pool.block_size} tokens, one reserved for decode)")
         return None
+
+    def can_admit(self, prompt: list[int]) -> bool:
+        """Whether ``submit(prompt)`` would succeed *right now*: a free slot,
+        and (paged) enough free or evictable blocks after prefix sharing.
+        The scheduler's continuous-batching gate."""
+        if self.active.all():
+            return False
+        return self.pool is None or self.pool.can_admit(prompt)
+
+    def pool_stats(self) -> dict:
+        """Paged-pool telemetry (empty dict for contiguous engines)."""
+        return {} if self.pool is None else self.pool.stats()
 
     def submit(self, prompt: list[int], *, max_new: int | None = None,
                temperature: float | None = None) -> int:
@@ -215,7 +258,17 @@ class ServingEngine:
         slot = int(free[0])
         rid = self._next_req
         self._next_req += 1
-        if self.bulk_prefill and ("k" in self.state or "c_kv" in self.state):
+        if self.paged:
+            plan = self.pool.admit(slot, prompt)
+            if plan is None:
+                self._next_req -= 1
+                raise RuntimeError(
+                    f"insufficient free KV blocks for a {len(prompt)}-token "
+                    f"prompt ({self.pool.available_blocks} available); step() "
+                    "until a request finishes")
+            self._prefill_slot_paged(slot, prompt, plan)
+            self.pool.register_prefix(slot, prompt)
+        elif self.bulk_prefill and ("k" in self.state or "c_kv" in self.state):
             # one bulk forward writes the whole slot cache (and rewrites the
             # full kpos row, so stale entries need no separate reset)
             self._prefill_slot(slot, prompt)
@@ -315,6 +368,101 @@ class ServingEngine:
         st["kpos"] = st["kpos"].at[:, slot].set(jnp.asarray(kpos_row, jnp.int32))
         self.state = st
 
+    # --------------------------------------------------------- paged prefill
+    def _scatter_pool(self, st, name, tbl_row, vidx, vals):
+        """Write per-token values ``vals`` [L, n, ...] into the pool at the
+        slot's logical view indices ``vidx`` (block = table[v // bs], offset
+        v % bs) — one scatter dispatch per leaf."""
+        bs = self.pool.block_size
+        blocks = tbl_row[vidx // bs]
+        offs = vidx % bs
+        st[name] = st[name].at[:, blocks, offs].set(vals.astype(st[name].dtype))
+
+    def _prefill_slot_paged(self, slot: int, prompt: list[int], plan) -> None:
+        """Apply an :class:`~repro.serving.kvpool.AdmitPlan`: install the
+        block table row, device-copy the COW block, prefill only the
+        non-cached tail (bulk forward when cold, ``api.prefill_extend``
+        against the gathered resident prefix on a prefix hit), and scatter
+        the fresh K/V into the slot's blocks."""
+        st = dict(self.state)
+        cfg, pool = self.cfg, self.pool
+        bs, plen = pool.block_size, len(prompt)
+        view = pool.view_blocks * bs  # == ring size when windowed
+        tbl_row = plan.table
+        self._tbl_host[slot] = tbl_row
+        st["block_tbl"] = jnp.asarray(self._tbl_host)
+        if plan.cow is not None:
+            src, dst = plan.cow
+            for name in self._pool_leaves:
+                st[name] = st[name].at[:, dst].set(st[name][:, src])
+        cached = plan.cached_tokens
+        kpos_row = np.full(view, -1, np.int64)
+        if cfg.attn_window is not None:  # ring layout, no prefix sharing
+            ps = np.arange(max(0, plen - view), plen)
+            vidx = ps % view
+            kpos_row[vidx] = ps
+        else:
+            ps = np.arange(cached, plen)
+            vidx = ps
+            kpos_row[:plen] = np.arange(plen)
+        if ps.size:  # uncached tail to prefill (cached == plen: nothing —
+            # the first decode step recomputes the last token's K/V anyway)
+            if cached == 0:
+                s_pad = min(self.max_len, max(8, 1 << (plen - 1).bit_length()))
+                if s_pad not in self._prefill_fns:
+                    self._prefill_fns[s_pad] = jax.jit(
+                        lambda p, t: api.prefill(p, cfg, {"tokens": t},
+                                                 collect_cache=True))
+                toks = np.zeros((1, s_pad), np.int32)
+                toks[0, :plen] = prompt
+                _h, caches = self._prefill_fns[s_pad](self.params,
+                                                      jnp.asarray(toks))
+                for name, c_all in zip(self._pool_leaves, caches):
+                    self._scatter_pool(st, name, tbl_row, vidx, c_all[:, 0, ps])
+            else:
+                self._extend_tail(st, prompt, cached, tbl_row, vidx, view)
+        st["kpos"] = st["kpos"].at[:, slot].set(jnp.asarray(kpos_row, jnp.int32))
+        self.state = st
+
+    def _extend_tail(self, st, prompt, cached, tbl_row, vidx, view) -> None:
+        """Prefix-hit tail prefill: gather the resident prefix through the
+        block table (the exact contiguous view), run the tail tokens against
+        it in one bucketed jitted forward, scatter the tail K/V back."""
+        cfg, plen = self.cfg, len(prompt)
+        tl = plen - cached
+        t_pad = max(8, 1 << (tl - 1).bit_length())
+        if t_pad not in self._extend_fns:
+            self._extend_fns[t_pad] = jax.jit(
+                lambda p, t, pos, past, last: api.prefill_extend(
+                    p, cfg, t, pos, past, last))
+        toks = np.zeros((1, t_pad), np.int32)
+        toks[0, :tl] = prompt[cached:]
+        posn = np.full((1, t_pad), -1, np.int64)
+        posn[0, :tl] = np.arange(cached, plen)
+        past = {}
+        for name in self._pool_leaves:
+            pool_leaf = st[name]  # [L, Nb, bs, ...]
+            g = pool_leaf[:, tbl_row]  # gather: [L, mb, bs, ...]
+            past[name] = g.reshape(pool_leaf.shape[0], 1, view,
+                                   *pool_leaf.shape[3:])
+        pk = np.full((1, view), -1, np.int64)
+        pk[0, :cached] = np.arange(cached)
+        past["kpos"] = jnp.broadcast_to(
+            jnp.asarray(pk, jnp.int32)[None], (cfg.n_layers, 1, view))
+        _logits, tails = self._extend_fns[t_pad](
+            self.params, jnp.asarray(toks), jnp.asarray(posn, jnp.int32),
+            past, jnp.asarray([tl - 1], jnp.int32))
+        for name, tail in tails.items():  # [L, 1, t_pad, ...]
+            self._scatter_pool(st, name, tbl_row, vidx, tail[:, 0, :tl])
+
+    def _release_slot(self, slot: int) -> None:
+        """Return a retired slot's blocks to the pool (registered prefix
+        blocks stay cached) and clear its table row."""
+        self.pool.release(slot)
+        self._tbl_host[slot] = 0
+        self.state = {**self.state,
+                      "block_tbl": jnp.asarray(self._tbl_host)}
+
     def cancel(self, rid: int) -> bool:
         """Stop an in-flight request (its slot frees on the spot); returns
         whether anything was cancelled.  The result keeps the tokens sampled
@@ -323,6 +471,8 @@ class ServingEngine:
             if r == rid and self.active[slot]:
                 self.active[slot] = False
                 self._slot_dev = None  # host mirrors mutated: re-upload once
+                if self.paged:
+                    self._release_slot(slot)
                 self.results[rid].finished = True
                 return True
         return False
@@ -334,6 +484,10 @@ class ServingEngine:
         events: list[StepEvent] = []
         if not self.active.any():
             return events
+        if self.paged:
+            events.extend(self._grow_blocks())
+            if not self.active.any():
+                return events
         eos = np.int32(-1 if self.eos is None else self.eos)
         if self._ctrl_dev is None:  # max_new/temps/keys only change at submit
             self._ctrl_dev = (jnp.asarray(self._max_new_arr),
@@ -363,7 +517,42 @@ class ServingEngine:
             if done[slot]:
                 r.finished = True
                 self.active[slot] = False
+                if self.paged:
+                    self._release_slot(slot)
             events.append(StepEvent(rid=rid, token=tok, finished=bool(done[slot])))
+        return events
+
+    def _grow_blocks(self) -> list[StepEvent]:
+        """Pre-step block growth: the upcoming step writes each active slot's
+        K/V at view index ``pos - 1`` — allocate the covering block when the
+        table has none (0 = null).  Windowed slots preallocate their whole
+        ring at admit, so this is a no-op for them.  A slot the pool cannot
+        grow finishes with an error (its blocks return to the pool)."""
+        events: list[StepEvent] = []
+        bs = self.pool.block_size
+        view = self.pool.view_blocks * bs
+        dirty = False
+        for slot in np.where(self.active)[0]:
+            bi = (int(self.pos[slot]) - 1) % view // bs
+            if self._tbl_host[slot, bi] != 0:
+                continue
+            bid = self.pool.append_block(slot)
+            if bid is None:
+                rid = self.slot_req[slot]
+                r = self.results[rid]
+                r.finished = True
+                r.error = ("KV block pool exhausted mid-decode "
+                           f"({self.pool.in_use_blocks} blocks in use)")
+                self.active[slot] = False
+                self._slot_dev = None
+                self._release_slot(slot)
+                events.append(StepEvent(rid=rid, token=None, finished=True))
+                continue
+            self._tbl_host[slot, bi] = bid
+            dirty = True
+        if dirty:
+            self.state = {**self.state,
+                          "block_tbl": jnp.asarray(self._tbl_host)}
         return events
 
     def generate(self, prompts: list[list[int]], max_new_tokens: int = 32, *,

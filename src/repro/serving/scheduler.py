@@ -52,6 +52,9 @@ class Scheduler:
         self._next_rid = 0
         self.results: dict[int, GenerationResult] = {}
         self._inflight: dict[int, Request] = {}  # engine rid -> request
+        # continuous-batching telemetry
+        self.admitted_while_running = 0  # admissions joining a live batch
+        self.mem_stalls = 0  # admit() passes blocked on KV blocks, not slots
 
     # ---------------------------------------------------------------- queue
     def enqueue(self, prompt: list[int], *, max_new: int | None = None,
@@ -91,10 +94,23 @@ class Scheduler:
     # ------------------------------------------------------------ admission
     def admit(self) -> list[int]:
         """Move queued requests into free engine slots (priority order);
-        returns the scheduler ids admitted now."""
+        returns the scheduler ids admitted now.
+
+        Continuous batching: this runs between jitted steps, so requests join
+        a live batch the moment a slot frees — the batch never drains.  On a
+        paged engine admission is additionally gated on KV *blocks*
+        (``engine.can_admit``): when the head-of-queue prompt cannot get its
+        blocks even by evicting cached prefixes, admission stops — strictly,
+        so a big high-priority request is never starved by small ones slipping
+        past it (no head-of-line bypass)."""
         admitted: list[int] = []
         while self._heap and (~self.engine.active).any():
-            _, _, req = heapq.heappop(self._heap)
+            req = self._heap[0][2]
+            if not self.engine.can_admit(req.prompt):
+                self.mem_stalls += 1
+                break
+            heapq.heappop(self._heap)
+            was_running = bool(self.engine.active.any())
             try:
                 erid = self.engine.submit(req.prompt, max_new=req.max_new,
                                           temperature=req.temperature)
@@ -108,6 +124,7 @@ class Scheduler:
             self.results[req.rid] = self.engine.results[erid]
             self._inflight[erid] = req
             admitted.append(req.rid)
+            self.admitted_while_running += was_running
         return admitted
 
     # ---------------------------------------------------------------- drive

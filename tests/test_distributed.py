@@ -206,7 +206,7 @@ def test_sharded_serving_decode_subprocess():
 
         tok = jnp.asarray([[3], [1], [2], [7]], jnp.int32)
         pos = jnp.asarray([2, 1, 3, 0], jnp.int32)
-        st0 = api.init_decode_state(cfg, 4, 64)
+        st0 = api.init_decode_state(cfg, 4, 64, kv_block=16)  # engine default layout
         l_ref, _ = ref._decode(ref.params, st0, tok, pos)
 
         for axes in (("data", "model"), ("model", "data")):
