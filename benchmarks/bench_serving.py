@@ -7,7 +7,10 @@ Three compressed workloads exercise the site-keyed executor:
 (FFN + attention q/k/v/o through the grouped fused launches), and an MoE
 section whose experts apply their chains in one grouped dispatch per layer.
 Each compressed row also reports the paper's Table-1 additions metric
-(``models.flops.compressed_adds``).
+(``models.flops.compressed_adds``) plus the measured ``pallas_launches`` per
+decode step; with the layer-plan executor active this equals ``n_layer_plans``
+(one launch per identical-layer stack).  A ``roofline`` section ties each
+artifact's per-site shift-add budget to the throughput it actually achieved.
 
 Two paged-KV sections ride on the same engines:
 
@@ -78,7 +81,11 @@ def bench_engine(make_engine, *, n_slots: int, prompt_len: int,
             "steps_timed": steps,  # post-clamp, the count actually measured
             "decode_tok_s": round(tok_s, 2),
             "prefill_ms": round(prefill_s * 1e3, 2),
-            "step_dispatches": eng.step_dispatches}
+            "step_dispatches": eng.step_dispatches,
+            # measured at the first decode trace: with layer plans active
+            # these two are equal (one launch covers a whole layer stack)
+            "pallas_launches": eng.pallas_launches_per_step,
+            "n_layer_plans": eng.n_layer_plans}
 
 
 def bench_poisson(make_engine, *, n_slots: int, n_requests: int,
@@ -282,6 +289,37 @@ def main() -> None:
                                                    max_len=max_len))):
         run(mode, make, 8, arch=cfg_moe.name)
 
+    # Roofline: per-site shift-add cost against the throughput each artifact
+    # actually achieved, so adds-vs-tok/s gaps are visible per PR.
+    def roofline_section(art, mode, arch):
+        row8 = next((r for r in results
+                     if r["mode"] == mode and r["arch"] == arch
+                     and r["n_slots"] == 8), None)
+        total_lcc = art.report.total_stage("lcc")
+        sec = {
+            "mode": mode, "arch": arch,
+            "total_baseline_adds": art.report.total_baseline(),
+            "total_lcc_adds": total_lcc,
+            "decode_tok_s_n8": row8["decode_tok_s"] if row8 else None,
+            "pallas_launches": row8["pallas_launches"] if row8 else None,
+            "n_layer_plans": row8["n_layer_plans"] if row8 else None,
+            "achieved_adds_per_s": (round(row8["decode_tok_s"] * total_lcc)
+                                    if row8 else None),
+            "sites": [{"site": l.name, "baseline_adds": l.baseline_adds,
+                       "lcc_adds": l.stage_adds.get("lcc"),
+                       "ratio": (round(l.ratio("lcc"), 2)
+                                 if l.stage_adds.get("lcc") else None)}
+                      for l in art.report.layers],
+        }
+        waste = (art.pipeline_stats or {}).get("padding_waste")
+        if waste:
+            sec["padding_waste"] = waste
+        return sec
+
+    roofline = [roofline_section(artifact, "compressed", cfg.name),
+                roofline_section(artifact_all, "compressed+attn", cfg.name),
+                roofline_section(artifact_moe, "compressed", cfg_moe.name)]
+
     report = {
         "bench": "serving",
         "arch": cfg.name,
@@ -298,6 +336,7 @@ def main() -> None:
             "moe": flops.compressed_adds(cfg_moe, artifact_moe),
         },
         "results": results,
+        "roofline": roofline,
         "poisson": poisson,
         "prefix_cache": prefix,
     }

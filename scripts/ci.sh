@@ -28,6 +28,27 @@ assert all(v['ratio'] > 1 for v in r['adds'].values()), r['adds']; \
 assert all(p['errors'] == 0 for p in r['poisson']), r['poisson']; \
 assert r['prefix_cache']['speedup'] >= 2, r['prefix_cache']; \
 assert r['prefix_cache']['leaked_blocks'] == 0, r['prefix_cache']"
+# perf gate: one measured Pallas launch per layer plan, and the smoke's
+# compressed decode must not fall below 0.8x the tracked full-bench number
+# (the smoke model is far smaller, so a pass means the plan path engaged)
+python - <<'EOF'
+import json
+r = json.load(open("/tmp/BENCH_serving.json"))
+for x in r["results"]:
+    if x["arch"] == "olmo-1b" and x["mode"].startswith("compressed"):
+        assert x["pallas_launches"] == x["n_layer_plans"] > 0, x
+smoke = next(x["decode_tok_s"] for x in r["results"]
+             if x["arch"] == "olmo-1b" and x["mode"] == "compressed"
+             and x["n_slots"] == 8)
+tracked = json.load(open("BENCH_serving.json"))
+base = next(x["decode_tok_s"] for x in tracked["results"]
+            if x["arch"] == "olmo-1b" and x["mode"] == "compressed"
+            and x["n_slots"] == 8)
+assert smoke >= 0.8 * base, (
+    f"compressed decode regressed: smoke {smoke} tok/s < 0.8x tracked {base}")
+assert r["roofline"] and all(s["sites"] for s in r["roofline"])
+print(f"perf gate OK: launches==plans, {smoke} tok/s >= 0.8x tracked {base}")
+EOF
 
 echo "== paged KV prefix-sharing smoke (60s budget) =="
 # two requests sharing a system prompt: the second must prefill from cached

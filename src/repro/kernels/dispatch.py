@@ -11,7 +11,8 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["default_interpret", "resolve_interpret"]
+__all__ = ["default_interpret", "resolve_interpret", "record_launch",
+           "launch_count", "reset_launch_count"]
 
 
 def default_interpret() -> bool:
@@ -21,3 +22,34 @@ def default_interpret() -> bool:
 
 def resolve_interpret(interpret: bool | None) -> bool:
     return default_interpret() if interpret is None else bool(interpret)
+
+
+# ---------------------------------------------------------------------------
+# launch accounting
+# ---------------------------------------------------------------------------
+#
+# Every decode-path kernel wrapper calls ``record_launch()`` from plain Python
+# *before* entering its jitted implementation, so the counter advances once
+# per ``pallas_call`` that a trace emits (inner jit caches never hide a call
+# site: the un-jitted wrapper body runs on every trace-time invocation).
+# Within one jitted decode step the trace-time count equals the runtime
+# launches per step — the number the serving bench reports as
+# ``pallas_launches`` and the 1-launch-per-layer claim is measured against.
+
+_launch_count = 0
+
+
+def record_launch(n: int = 1) -> None:
+    """Count ``n`` Pallas launches emitted by the current (trace-time) call."""
+    global _launch_count
+    _launch_count += n
+
+
+def launch_count() -> int:
+    """Cumulative launches recorded since import (or the last reset)."""
+    return _launch_count
+
+
+def reset_launch_count() -> None:
+    global _launch_count
+    _launch_count = 0

@@ -45,7 +45,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .dispatch import resolve_interpret
+from .dispatch import record_launch, resolve_interpret
 
 __all__ = ["lcc_chain_matmul"]
 
@@ -93,8 +93,6 @@ def _kernel(idx_ref, exp_ref, sign_ref, x_ref, o_ref, cur_ref, *,
     o_ref[...] += cur_ref[0:n_pad, :]
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "first_width",
-                                             "interpret", "use_gather"))
 def lcc_chain_matmul(
     idx: jnp.ndarray,
     exp: jnp.ndarray,
@@ -114,6 +112,24 @@ def lcc_chain_matmul(
     interpreting, one-hot/MXU when compiled); exposed so the compiled
     formulation stays testable under the interpreter.
     """
+    record_launch()  # un-jitted: counts once per pallas_call a trace emits
+    return _lcc_chain_matmul(idx, exp, sign, x, block_b=block_b,
+                             first_width=first_width, interpret=interpret,
+                             use_gather=use_gather)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "first_width",
+                                             "interpret", "use_gather"))
+def _lcc_chain_matmul(
+    idx: jnp.ndarray,
+    exp: jnp.ndarray,
+    sign: jnp.ndarray,
+    x: jnp.ndarray,
+    block_b: int = 128,
+    first_width: int | None = None,
+    interpret: bool | None = None,
+    use_gather: bool | None = None,
+) -> jnp.ndarray:
     e_slices, p_factors, n_pad, s_terms = idx.shape
     xe, d_pad, b_pad = x.shape
     if xe != e_slices:

@@ -34,14 +34,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .dispatch import resolve_interpret
+from .dispatch import record_launch, resolve_interpret
 from .lcc_chain_matmul import _kernel
 
 __all__ = ["lcc_group_matmul"]
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "first_width",
-                                             "interpret", "use_gather"))
 def lcc_group_matmul(
     idx: jnp.ndarray,
     exp: jnp.ndarray,
@@ -58,6 +56,24 @@ def lcc_group_matmul(
     per group; ``first_width`` is shared across groups (the max padded slice
     width — narrower groups read zero-padded columns, which contribute 0).
     """
+    record_launch()  # un-jitted: counts once per pallas_call a trace emits
+    return _lcc_group_matmul(idx, exp, sign, x, block_b=block_b,
+                             first_width=first_width, interpret=interpret,
+                             use_gather=use_gather)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "first_width",
+                                             "interpret", "use_gather"))
+def _lcc_group_matmul(
+    idx: jnp.ndarray,
+    exp: jnp.ndarray,
+    sign: jnp.ndarray,
+    x: jnp.ndarray,
+    block_b: int = 128,
+    first_width: int | None = None,
+    interpret: bool | None = None,
+    use_gather: bool | None = None,
+) -> jnp.ndarray:
     g_groups, e_slices, p_factors, n_pad, s_terms = idx.shape
     xg, xe, d_pad, b_pad = x.shape
     if (xg, xe) != (g_groups, e_slices):

@@ -18,6 +18,8 @@ Pallas on TPU, interpreter on CPU/GPU (``repro.kernels.dispatch``).
 """
 from __future__ import annotations
 
+import functools
+import warnings
 from dataclasses import dataclass
 
 import jax.numpy as jnp
@@ -25,6 +27,7 @@ import numpy as np
 
 from repro.core.lcc import LCCChain, LCCDecomposition
 
+from .dispatch import record_launch
 from .group_prox import group_prox
 from .lcc_chain_matmul import lcc_chain_matmul
 from .lcc_group_matmul import lcc_group_matmul
@@ -35,9 +38,12 @@ __all__ = [
     "PackedChain",
     "PackedDecomposition",
     "PackedGroup",
+    "PackedStage",
     "pack_chain",
     "pack_decomposition",
     "pack_group",
+    "pack_stage",
+    "pack_layer",
     "apply_packed_chain",
     "apply_packed_decomposition",
     "apply_packed_group",
@@ -180,6 +186,7 @@ class PackedGroup:
     members: tuple[PackedDecomposition, ...]
     d_pad: int
     first_width: int
+    waste: dict | None = None  # padding-waste fractions (see pack_group)
 
     @property
     def n_groups(self) -> int:
@@ -216,8 +223,27 @@ def pack_group(members: list[PackedDecomposition]) -> PackedGroup:
         # chains shorter than the group max continue as identity factors
         gi[g, :e, p:, :, 0] = ident
         gs[g, :e, p:, :, 0] = 1
+    # padding-waste accounting: a (slice, factor, row) slot whose sign terms
+    # are all zero does no work but is still streamed and iterated — report
+    # the fraction per group so badly-matched group members are visible
+    zero_rows = (gs == 0).all(axis=-1)  # [G, E, P, N]
+    zero_slices = zero_rows.all(axis=(2, 3))  # [G, E]
+    row_frac = zero_rows.reshape(len(members), -1).mean(axis=1)
+    slice_frac = zero_slices.mean(axis=1)
+    waste = {
+        "row_waste": [float(f) for f in row_frac],
+        "slice_waste": [float(f) for f in slice_frac],
+        "mean_row_waste": float(row_frac.mean()),
+        "shape": list(gi.shape),
+    }
+    if waste["mean_row_waste"] > 0.5:
+        warnings.warn(
+            f"pack_group: {waste['mean_row_waste']:.0%} of padded rows carry "
+            f"sign==0 across {len(members)} members (shape {gi.shape}) — "
+            "group members are badly matched; consider splitting the group",
+            stacklevel=2)
     return PackedGroup(idx=gi, exp=ge, sign=gs, members=tuple(members),
-                       d_pad=d_pad, first_width=first_width)
+                       d_pad=d_pad, first_width=first_width, waste=waste)
 
 
 def apply_packed_group(pg: PackedGroup, xs, *, block: int = 128,
@@ -277,6 +303,7 @@ def _apply_stacked_per_factor(idx, exp, sign, x_pad, chain_lengths, *,
     for e in range(e_slices):
         cur = x_pad[e]
         for p in range(chain_lengths[e]):
+            record_launch()  # one pallas_call per (slice, factor)
             out = lcc_factor_matmul(idx[e, p], exp[e, p], sign[e, p], cur,
                                     block_n=min(block, n_pad),
                                     block_k=min(block, d_pad),
@@ -361,6 +388,7 @@ def segment_sum_tpu(labels: jnp.ndarray, x: jnp.ndarray, num_clusters: int,
     because the padded x rows are zero — keep that invariant when changing the
     padding.
     """
+    record_launch()  # cluster_segment_sum is one pallas_call
     k, b = x.shape
     bc = min(128, num_clusters)
     c_pad = _round_up(num_clusters, bc)
@@ -381,6 +409,299 @@ def shared_matmul_tpu(centroids: jnp.ndarray, labels: jnp.ndarray, x: jnp.ndarra
     """Eq. (10) on TPU: kernel segment-sum then centroid matmul. x [K, B] -> [N, B]."""
     agg = segment_sum_tpu(labels, x, centroids.shape[1], interpret=interpret)
     return centroids.astype(jnp.float32) @ agg
+
+
+# ---------------------------------------------------------------------------
+# layer plans: every compressed site of a layer stage in ONE buffer
+# ---------------------------------------------------------------------------
+#
+# ``pack_group`` still pays one launch per *region* (q/k/v, gate/up, ...).  A
+# layer plan goes further: all sites that consume the same activation are
+# flattened into a single gather/shift-add *stage*, and all L identical layers
+# stack along a leading axis so one ``pallas_call`` with grid (L,) executes the
+# whole decode step.  The stage representation is specialized to the ternary /
+# CSD structure (core/csd.py): a row is sum_s sign * 2^exp * prev[idx], so the
+# kernel needs only integer gathers + shift-adds — no sign-padded dense tiles.
+#
+# Per stage, for layer l:
+#
+#   prep_src/prep_tgt [L, M]     scatter-add pairs building the stage input
+#                                buffer: inbuf[tgt] += src[src'] implements
+#                                both kept-column gather and weight-sharing
+#                                segment-sum (tgt = cluster label).  Padding
+#                                pairs are (0, K_alloc - 1): they add into a
+#                                dead row that nothing downstream reads.
+#   gidx/gexp/gsgn [L, P, R, S]  every FP slice of every site, concatenated
+#                                along the row axis R; level 0 reads inbuf,
+#                                levels >= 1 read the running work buffer.
+#                                sign == 0 marks unused slots (rows decompress
+#                                to zero); short chains continue as identity.
+#   outg [L, J, O]               output gather: out[o] = sum_j work[outg[j,o]]
+#                                (J = max FP-slice count of any site; padded
+#                                entries point at the all-zero row R).
+#   fs_mat [L, O, K_alloc]       FS-program dense fallback applied to inbuf
+#                                (column K_alloc - 1, the dead row, is zero).
+#   dw_mat [L, O, D_src]         uncovered sites' dense weights (w.T) baked in
+#                                so the stage still produces the full output.
+#   bias [L, O]                  site biases, summed at their output offsets.
+
+
+@dataclass(frozen=True)
+class PackedStage:
+    """One layer stage (e.g. fused q+k+v) stacked over L layers.
+
+    All arrays are numpy: stages are trace-time constants (they embed in the
+    jitted step) and must survive artifact save/load round trips.
+    """
+
+    prep_src: np.ndarray | None  # [L, M] int32
+    prep_tgt: np.ndarray | None  # [L, M] int32
+    gidx: np.ndarray | None  # [L, P, R, S] int32
+    gexp: np.ndarray | None  # [L, P, R, S] int8
+    gsgn: np.ndarray | None  # [L, P, R, S] int8
+    outg: np.ndarray | None  # [L, J, O] int32
+    fs_mat: np.ndarray | None  # [L, O, K_alloc] f32
+    dw_mat: np.ndarray | None  # [L, O, D_src] f32
+    bias: np.ndarray | None  # [L, O] f32
+    k_alloc: int  # inbuf rows incl. trailing dead row
+    d_src: int  # stage input rows
+    out_dim: int  # stage output rows O
+    n_layers: int
+    site_names: tuple[str, ...]  # compressed sites this stage covers
+
+    @property
+    def has_prep(self) -> bool:
+        return self.prep_src is not None
+
+    @property
+    def has_fp(self) -> bool:
+        return self.gidx is not None
+
+    @functools.cached_property
+    def gcoef(self) -> np.ndarray:
+        """``sign * 2**exp`` as f32 [L, P, R, S] — precomputed (exactly: a
+        signed power of two is exact in f32) so the kernel pays a single load
+        per term instead of two int8 converts, an exp2 and a multiply."""
+        return (self.gsgn.astype(np.float32)
+                * np.exp2(self.gexp.astype(np.float32)))
+
+    def operands(self) -> list[np.ndarray]:
+        """Kernel operands in canonical order (mirrored by layer_plan)."""
+        ops_ = []
+        if self.has_prep:
+            ops_ += [self.prep_src, self.prep_tgt]
+        if self.has_fp:
+            ops_ += [self.gidx, self.gcoef, self.outg]
+        if self.fs_mat is not None:
+            ops_.append(self.fs_mat)
+        if self.dw_mat is not None:
+            ops_.append(self.dw_mat)
+        if self.bias is not None:
+            ops_.append(self.bias)
+        return ops_
+
+
+def _fuse_csd_levels(idx: np.ndarray, exp: np.ndarray, sgn: np.ndarray
+                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Fuse adjacent CSD levels pairwise: two 2-term shift-add levels become
+    one 4-term level (``exp`` summed, signs multiplied — still exact signed
+    powers of two), halving the sequential depth at an identical add count.
+    A term whose parent row is all-dead composes to sign 0, exactly matching
+    the sequential evaluation (the parent row decompresses to zero).  An odd
+    trailing level rides along unfused.  Arrays are [P, rows, S]."""
+    pm, rows, s = idx.shape
+    if pm < 2:
+        return (idx.astype(np.int64), exp.astype(np.int32),
+                sgn.astype(np.int32))
+    out_i, out_e, out_s = [], [], []
+    p = 0
+    while p < pm:
+        if p + 1 == pm:
+            out_i.append(idx[p].astype(np.int64))
+            out_e.append(exp[p].astype(np.int32))
+            out_s.append(sgn[p].astype(np.int32))
+            break
+        a_i, a_e, a_s = (idx[p].astype(np.int64), exp[p].astype(np.int32),
+                         sgn[p].astype(np.int32))
+        b_i, b_e, b_s = (idx[p + 1].astype(np.int64),
+                         exp[p + 1].astype(np.int32),
+                         sgn[p + 1].astype(np.int32))
+        j = np.clip(b_i, 0, rows - 1)  # dead terms may carry junk indices
+        ci = a_i[j]  # [rows, S, S]
+        ce = b_e[:, :, None] + a_e[j]
+        cs = b_s[:, :, None] * a_s[j]
+        live = cs != 0
+        out_i.append(np.where(live, ci, 0).reshape(rows, s * s))
+        out_e.append(np.where(live, ce, 0).reshape(rows, s * s))
+        out_s.append(cs.reshape(rows, s * s))
+        p += 2
+    s_new = max(a.shape[1] for a in out_i)
+    fi = np.zeros((len(out_i), rows, s_new), np.int64)
+    fe = np.zeros((len(out_i), rows, s_new), np.int32)
+    fs = np.zeros((len(out_i), rows, s_new), np.int32)
+    for q, (ai, ae, as_) in enumerate(zip(out_i, out_e, out_s)):
+        fi[q, :, : ai.shape[1]] = ai
+        fe[q, :, : ae.shape[1]] = ae
+        fs[q, :, : as_.shape[1]] = as_
+    return fi, fe, fs
+
+
+def pack_stage(layer_sites: list[list[dict]], *, d_src: int, out_dim: int
+               ) -> PackedStage:
+    """Flatten per-layer site lists into one stacked stage.
+
+    ``layer_sites[l]`` is the sites of layer l, each a dict:
+
+      {"kind": "lcc", "name", "out_off", "src_off", "kept" [ints],
+       "labels" [ints]|None, "n_clusters" int, "packed" PackedDecomposition,
+       "bias" [out]|None}
+      {"kind": "dense", "out_off", "src_off", "w" [in, out], "bias"|None}
+
+    Sites write disjoint [out_off, out_off + site_out) row ranges of the
+    stage output and read [src_off, ...) of the shared stage input.
+    """
+    n_layers = len(layer_sites)
+    built = []  # per-layer dict of intermediate layout
+    any_bias = any_fs = any_dw = False
+    names: list[str] = []
+    for sites in layer_sites:
+        in_off = 0
+        prep_pairs: list[tuple[np.ndarray, np.ndarray]] = []
+        insts: list[dict] = []  # one per FP slice, in site order
+        site_slices: list[tuple[int, int, list[int]]] = []  # (out_off, odim, inst ids)
+        fs_entries: list[tuple[int, int, int, np.ndarray]] = []
+        dw_entries: list[tuple[int, int, np.ndarray]] = []
+        bias_vec = None
+        for st in sites:
+            b = st.get("bias")
+            if b is not None:
+                any_bias = True
+                if bias_vec is None:
+                    bias_vec = np.zeros(out_dim, np.float32)
+                b = np.asarray(b, np.float32)
+                bias_vec[st["out_off"]: st["out_off"] + b.size] += b
+            if st["kind"] == "dense":
+                any_dw = True
+                w = np.asarray(st["w"], np.float32)
+                dw_entries.append((st["out_off"], st["src_off"], w.T))
+                continue
+            names.append(st["name"])
+            kept = np.asarray(st["kept"], np.int64)
+            labels = st.get("labels")
+            packed = st["packed"]
+            tgt = (np.asarray(labels, np.int64) if labels is not None
+                   else np.arange(kept.size))
+            n_in = int(st["n_clusters"]) if labels is not None else kept.size
+            if packed.in_dim != n_in:
+                raise ValueError(f"{st['name']}: packed.in_dim={packed.in_dim}"
+                                 f" != aggregated input {n_in}")
+            prep_pairs.append((st["src_off"] + kept, in_off + tgt))
+            idx = np.asarray(packed.idx)
+            exp = np.asarray(packed.exp)
+            sgn = np.asarray(packed.sign)
+            ids = []
+            for e, (c0, c1) in enumerate(packed.col_slices):
+                fi, fe, fsg = _fuse_csd_levels(idx[e], exp[e], sgn[e])
+                ids.append(len(insts))
+                insts.append({"in0": in_off + c0, "width": c1 - c0,
+                              "idx": fi, "exp": fe, "sgn": fsg,
+                              "n_pad": idx.shape[2]})
+            site_slices.append((st["out_off"], packed.out_dim, ids))
+            for (c0, c1), w in packed.dense:
+                any_fs = True
+                fs_entries.append((st["out_off"], packed.out_dim,
+                                   in_off + c0, np.asarray(w, np.float32)))
+            in_off += n_in
+        built.append({"k_used": in_off, "prep": prep_pairs, "insts": insts,
+                      "site_slices": site_slices, "fs": fs_entries,
+                      "dw": dw_entries, "bias": bias_vec})
+
+    has_prep = any(bl["k_used"] for bl in built)
+    has_fp = any(bl["insts"] for bl in built)
+    k_alloc = (max(bl["k_used"] for bl in built) + 1) if has_prep else 0
+    m_max = max([sum(p[0].size for p in bl["prep"]) for bl in built] + [1])
+    r_max = max([sum(i["n_pad"] for i in bl["insts"]) for bl in built] + [1])
+    p_max = max([i["idx"].shape[0] for bl in built for i in bl["insts"]] + [1])
+    s_max = max([i["idx"].shape[2] for bl in built for i in bl["insts"]] + [1])
+    j_max = max([len(ids) for bl in built for _, _, ids in bl["site_slices"]]
+                + [1])
+
+    prep_src = prep_tgt = gidx = gexp = gsgn = outg = None
+    fs_mat = dw_mat = bias = None
+    if has_prep:
+        prep_src = np.zeros((n_layers, m_max), np.int32)
+        prep_tgt = np.full((n_layers, m_max), k_alloc - 1, np.int32)
+    if has_fp:
+        gidx = np.zeros((n_layers, p_max, r_max, s_max), np.int32)
+        gexp = np.zeros((n_layers, p_max, r_max, s_max), np.int8)
+        gsgn = np.zeros((n_layers, p_max, r_max, s_max), np.int8)
+        outg = np.full((n_layers, j_max, out_dim), r_max, np.int32)
+    if any_fs:
+        fs_mat = np.zeros((n_layers, out_dim, k_alloc), np.float32)
+    if any_dw:
+        dw_mat = np.zeros((n_layers, out_dim, d_src), np.float32)
+    if any_bias:
+        bias = np.zeros((n_layers, out_dim), np.float32)
+
+    for l, bl in enumerate(built):
+        if bl["prep"]:
+            src = np.concatenate([p[0] for p in bl["prep"]])
+            tgt = np.concatenate([p[1] for p in bl["prep"]])
+            prep_src[l, : src.size] = src
+            prep_tgt[l, : tgt.size] = tgt
+        work_offs = []
+        wo = 0
+        for inst in bl["insts"]:
+            work_offs.append(wo)
+            np_, sm = inst["n_pad"], inst["idx"].shape[2]
+            pm = inst["idx"].shape[0]
+            for p in range(p_max):
+                if p < pm:
+                    ii = inst["idx"][p].astype(np.int64)
+                    ss = inst["sgn"][p]
+                    ee = inst["exp"][p]
+                    if p == 0:
+                        # level 0 reads inbuf at the slice's column window;
+                        # identity-padded level-0 rows of 0-factor chains can
+                        # span n_pad > width — mask them so they never read a
+                        # neighbouring site's region (the zero-padded-slab
+                        # semantics of the per-region kernels)
+                        live = (ss != 0) & (ii < inst["width"])
+                        comp, safe = inst["in0"] + ii, inst["in0"]
+                    else:
+                        live = ss != 0
+                        comp, safe = wo + ii, wo
+                    gidx[l, p, wo: wo + np_, :sm] = np.where(live, comp, safe)
+                    gsgn[l, p, wo: wo + np_, :sm] = np.where(live, ss, 0)
+                    gexp[l, p, wo: wo + np_, :sm] = np.where(live, ee, 0)
+                else:  # identity continuation over the stage's extra levels
+                    gidx[l, p, wo: wo + np_, 0] = wo + np.arange(np_)
+                    gsgn[l, p, wo: wo + np_, 0] = 1
+            wo += np_
+        for out_off, odim, ids in bl["site_slices"]:
+            for j, inst_id in enumerate(ids):
+                outg[l, j, out_off: out_off + odim] = \
+                    work_offs[inst_id] + np.arange(odim)
+        for out_off, odim, i0, w in bl["fs"]:
+            fs_mat[l, out_off: out_off + odim, i0: i0 + w.shape[1]] = w
+        for out_off, src_off, wt in bl["dw"]:
+            dw_mat[l, out_off: out_off + wt.shape[0],
+                   src_off: src_off + wt.shape[1]] = wt
+        if bl["bias"] is not None:
+            bias[l] = bl["bias"]
+
+    return PackedStage(prep_src=prep_src, prep_tgt=prep_tgt, gidx=gidx,
+                       gexp=gexp, gsgn=gsgn, outg=outg, fs_mat=fs_mat,
+                       dw_mat=dw_mat, bias=bias, k_alloc=k_alloc, d_src=d_src,
+                       out_dim=out_dim, n_layers=n_layers,
+                       site_names=tuple(names))
+
+
+def pack_layer(stage_specs: dict[str, tuple[list[list[dict]], int, int]]
+               ) -> dict[str, PackedStage]:
+    """Pack every stage of a layer plan: name -> (layer_sites, d_src, out_dim)."""
+    return {name: pack_stage(sites, d_src=d_src, out_dim=out_dim)
+            for name, (sites, d_src, out_dim) in stage_specs.items()}
 
 
 # ---------------------------------------------------------------------------

@@ -92,20 +92,32 @@ def moe_ffn(p, x, *, n_experts: int, top_k: int, capacity_factor: float = 1.25,
         ys = fused([z[e].astype(jnp.float32).T for e in range(n_experts)])
         return jnp.stack([y.T for y in ys]).astype(z.dtype)
 
-    h_gate = expert_mm("gate", buf)
-    h_up = expert_mm("up", buf)
-    mesh = get_mesh()
-    ep = (mesh is not None and "model" in mesh.shape
-          and n_experts % mesh.shape["model"] == 0 and n_experts >= mesh.shape["model"])
-    if ep:  # EP: experts across "model"
-        h_gate = constrain(h_gate, "model", None, None)
-        h_up = constrain(h_up, "model", None, None)
-    else:  # TP within expert: shard expert d_ff
-        h_gate = constrain(h_gate, None, None, "model")
-        h_up = constrain(h_up, None, None, "model")
-    h = jax.nn.silu(h_gate) * h_up
-    out_buf = constrain(expert_mm("down", h),
-                        "model", None, None).reshape(n_experts * cap, d)
+    plan = None
+    if executor is not None and site_tag is not None:
+        mp = getattr(executor, "moe_plan", None)
+        if mp is not None:
+            plan = mp(site_tag, n_experts=n_experts, d_model=d,
+                      d_ff=p["gate"].shape[-1])
+    if plan is not None:
+        # layer plan: all experts' gate/up/SwiGLU/down in ONE launch,
+        # replacing the three grouped expert_mm dispatches
+        out_buf = constrain(plan(buf), "model", None, None
+                            ).reshape(n_experts * cap, d)
+    else:
+        h_gate = expert_mm("gate", buf)
+        h_up = expert_mm("up", buf)
+        mesh = get_mesh()
+        ep = (mesh is not None and "model" in mesh.shape
+              and n_experts % mesh.shape["model"] == 0 and n_experts >= mesh.shape["model"])
+        if ep:  # EP: experts across "model"
+            h_gate = constrain(h_gate, "model", None, None)
+            h_up = constrain(h_up, "model", None, None)
+        else:  # TP within expert: shard expert d_ff
+            h_gate = constrain(h_gate, None, None, "model")
+            h_up = constrain(h_up, None, None, "model")
+        h = jax.nn.silu(h_gate) * h_up
+        out_buf = constrain(expert_mm("down", h),
+                            "model", None, None).reshape(n_experts * cap, d)
 
     y = jnp.zeros((t, d), x.dtype)
     for j in range(top_k):

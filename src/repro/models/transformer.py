@@ -655,53 +655,61 @@ def decode_step(params, cfg: ArchConfig, state, token, pos, *, unroll: bool = Fa
             new["block_tbl"] = tbl
     else:
         tbl = state.get("block_tbl")
-
-        def body_for(li):
-            ex = executor if li is not None else None
-
-            def ffn_fn(p, ffn_in):
-                if cfg.moe is not None:
-                    moe_fn = moe_ffn_manual if cfg.moe_manual else moe_ffn
-                    kw = ({"executor": ex, "site_tag": f"l{li}"}
-                          if ex is not None and not cfg.moe_manual else {})
-                    y, _ = moe_fn(p, ffn_in, n_experts=cfg.moe.n_experts,
-                                  top_k=cfg.moe.top_k,
-                                  capacity_factor=cfg.moe.capacity_factor,
-                                  norm_topk=cfg.moe.norm_topk, **kw)
-                    return y
-                if ex is not None:
-                    return _sites_swiglu(ex, f"ffn.{{}}.l{li}")(p, ffn_in)
-                return swiglu(p, ffn_in)
-
-            def body(x, xs):
-                bp, k, v, kp = xs
-                cache = (PagedKVCache(k=k, v=v, kpos=kp, tbl=tbl)
-                         if tbl is not None else KVCache(k=k, v=v, kpos=kp))
-                y, c2 = attention_decode(
-                    bp["attn"], _norm(cfg, bp["ln1"], x), cache, pos,
-                    n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
-                    window=cfg.attn_window,
-                    rope_theta=None if cfg.pos in ("none", "mrope") else cfg.rope_theta,
-                    mrope_sections=cfg.mrope_sections if cfg.pos == "mrope" else None,
-                    mrope_positions=jnp.broadcast_to(pos[None, :, None], (3, pos.shape[0], 1))
-                    if cfg.pos == "mrope" else None,
-                    executor=ex,
-                    site=f"attn.{{}}.l{li}" if ex is not None else None)
-                x = x + y
-                ffn_in = _norm(cfg, bp["ln2"], x)
-                y = ffn_fn(bp["ffn"], ffn_in)
-                return x + y, (c2.k, c2.v, c2.kpos)
-            return body
-
-        xs_all = (blocks, state["k"], state["v"], state["kpos"])
-        if executor is None:
-            x, outs = _scan(body_for(None), x, xs_all, unroll)
+        # whole-step layer plan: when the executor can express the full layer
+        # stack as one stacked-grid launch, the per-layer loop (and all its
+        # per-region dispatches) is replaced by a single pallas_call
+        plan = (executor.step_plan(cfg)
+                if executor is not None and hasattr(executor, "step_plan")
+                else None)
+        if plan is not None:
+            x, new = plan.decode_layers(state, x, pos)
         else:
-            # unrolled layer loop: each layer binds its own kernel buffers
-            x, outs = _unrolled_layers(body_for, x, xs_all, cfg.n_layers)
-        new = {"k": outs[0], "v": outs[1], "kpos": outs[2]}
-        if tbl is not None:
-            new["block_tbl"] = tbl
+            def body_for(li):
+                ex = executor if li is not None else None
+
+                def ffn_fn(p, ffn_in):
+                    if cfg.moe is not None:
+                        moe_fn = moe_ffn_manual if cfg.moe_manual else moe_ffn
+                        kw = ({"executor": ex, "site_tag": f"l{li}"}
+                              if ex is not None and not cfg.moe_manual else {})
+                        y, _ = moe_fn(p, ffn_in, n_experts=cfg.moe.n_experts,
+                                      top_k=cfg.moe.top_k,
+                                      capacity_factor=cfg.moe.capacity_factor,
+                                      norm_topk=cfg.moe.norm_topk, **kw)
+                        return y
+                    if ex is not None:
+                        return _sites_swiglu(ex, f"ffn.{{}}.l{li}")(p, ffn_in)
+                    return swiglu(p, ffn_in)
+
+                def body(x, xs):
+                    bp, k, v, kp = xs
+                    cache = (PagedKVCache(k=k, v=v, kpos=kp, tbl=tbl)
+                             if tbl is not None else KVCache(k=k, v=v, kpos=kp))
+                    y, c2 = attention_decode(
+                        bp["attn"], _norm(cfg, bp["ln1"], x), cache, pos,
+                        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                        window=cfg.attn_window,
+                        rope_theta=None if cfg.pos in ("none", "mrope") else cfg.rope_theta,
+                        mrope_sections=cfg.mrope_sections if cfg.pos == "mrope" else None,
+                        mrope_positions=jnp.broadcast_to(pos[None, :, None], (3, pos.shape[0], 1))
+                        if cfg.pos == "mrope" else None,
+                        executor=ex,
+                        site=f"attn.{{}}.l{li}" if ex is not None else None)
+                    x = x + y
+                    ffn_in = _norm(cfg, bp["ln2"], x)
+                    y = ffn_fn(bp["ffn"], ffn_in)
+                    return x + y, (c2.k, c2.v, c2.kpos)
+                return body
+
+            xs_all = (blocks, state["k"], state["v"], state["kpos"])
+            if executor is None:
+                x, outs = _scan(body_for(None), x, xs_all, unroll)
+            else:
+                # unrolled layer loop: each layer binds its own kernel buffers
+                x, outs = _unrolled_layers(body_for, x, xs_all, cfg.n_layers)
+            new = {"k": outs[0], "v": outs[1], "kpos": outs[2]}
+            if tbl is not None:
+                new["block_tbl"] = tbl
 
     h = _norm(cfg, params["final_ln"], x)
     logits = logits_from_hidden(params, cfg, h)[:, 0]

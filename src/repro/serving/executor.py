@@ -35,7 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["CompressedExecutor", "LCCMatvec", "GroupedLCCMatvec", "ConvLCC",
-           "matvecs_from_artifact"]
+           "StepPlan", "MoEPlan", "matvecs_from_artifact"]
 
 
 class LCCMatvec:
@@ -228,6 +228,200 @@ class ConvLCC:
         return self._fn(x, stride=stride, padding=padding)
 
 
+class StepPlan:
+    """Whole-decode-step layer plan for the dense transformer family.
+
+    Packs every site of every layer — attention q/k/v/o and FFN gate/up/down,
+    compressed (CSD shift-add segments) or not (baked dense blocks) — into
+    four stacked :class:`~repro.kernels.ops.PackedStage` buffers and executes
+    the full step as ONE ``pallas_call`` with grid ``(L,)``
+    (:func:`repro.kernels.layer_plan.step_plan_matmul`).  KV write-back runs
+    outside the kernel, vectorized over layers, for both contiguous and paged
+    caches.
+    """
+
+    def __init__(self, executor, cfg):
+        from repro.kernels import ops
+
+        self.executor = executor
+        self.cfg = cfg
+        art = executor.artifact
+        blocks = art.params["blocks"]
+        d, dff = cfg.d_model, cfg.d_ff
+        nq, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        covered: list[str] = []
+
+        def spec(name, pdict, li, out_off):
+            rec = art.records.get(name)
+            # np.asarray BEFORE indexing: the plan may build lazily inside a
+            # jit trace, where even slicing a concrete constant binds a traced
+            # op — converting the whole stack first keeps the build pure-host
+            bias = (np.asarray(pdict["b"], np.float32)[li]
+                    if "b" in pdict else None)
+            if rec is None or not hasattr(rec, "decomposition"):
+                # uncovered site: bake its dense weights into the stage so the
+                # plan still emits the layer's full output
+                return {"kind": "dense", "out_off": out_off, "src_off": 0,
+                        "w": np.asarray(pdict["w"], np.float32)[li],
+                        "bias": bias}
+            covered.append(name)
+            packed = art.packed.get(name)
+            if packed is None:
+                packed = ops.pack_decomposition(rec.decomposition,
+                                                executor.block)
+            return {"kind": "lcc", "name": name, "out_off": out_off,
+                    "src_off": 0,
+                    "kept": np.asarray(rec.kept_columns, np.int64),
+                    "labels": (np.asarray(rec.shared.labels, np.int64)
+                               if rec.shared is not None else None),
+                    "n_clusters": (rec.shared.n_clusters
+                                   if rec.shared is not None else 0),
+                    "packed": packed, "bias": bias}
+
+        qkv, o_, gu, dn = [], [], [], []
+        for li in range(cfg.n_layers):
+            ab, fb = blocks["attn"], blocks["ffn"]
+            qkv.append([spec(f"attn.q.l{li}", ab["q"], li, 0),
+                        spec(f"attn.k.l{li}", ab["k"], li, nq * hd),
+                        spec(f"attn.v.l{li}", ab["v"], li, (nq + nkv) * hd)])
+            o_.append([spec(f"attn.o.l{li}", ab["o"], li, 0)])
+            gu.append([spec(f"ffn.gate.l{li}", fb["gate"], li, 0),
+                       spec(f"ffn.up.l{li}", fb["up"], li, dff)])
+            dn.append([spec(f"ffn.down.l{li}", fb["down"], li, 0)])
+        pre = art.plans.get("step") if hasattr(art, "plans") else None
+        if (pre is not None
+                and all(ps.n_layers == cfg.n_layers for ps in pre.values())):
+            self.stages = pre  # artifact shipped plan-ready packed buffers
+        else:
+            self.stages = ops.pack_layer({
+                "qkv": (qkv, d, (nq + 2 * nkv) * hd),
+                "o": (o_, nq * hd, d),
+                "gu": (gu, d, 2 * dff),
+                "dn": (dn, dff, d)})
+            if hasattr(art, "plans"):
+                art.plans["step"] = self.stages
+        self.ln1 = (np.asarray(blocks["ln1"], np.float32)
+                    if cfg.norm == "rms" else None)
+        self.ln2 = (np.asarray(blocks["ln2"], np.float32)
+                    if cfg.norm == "rms" else None)
+        self.covered = frozenset(covered)
+
+    def decode_layers(self, state, x, pos):
+        """x [B, 1, d] embedded tokens -> (x' [B, 1, d], new kv state)."""
+        from repro.kernels import layer_plan
+        from repro.models.layers import _rope_sincos
+
+        cfg = self.cfg
+        self.executor.routed.update(self.covered)
+        k_state, v_state, kpos = state["k"], state["v"], state["kpos"]
+        tbl = state.get("block_tbl")
+        nl, nkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+        b = x.shape[0]
+        if tbl is not None:  # paged: pre-gather the table's view for the kernel
+            kc = k_state[:, tbl].reshape(nl, b, -1, nkv, hd)
+            vc = v_state[:, tbl].reshape(nl, b, -1, nkv, hd)
+        else:
+            kc, vc = k_state, v_state
+        pos = pos.astype(jnp.int32)
+        cos = sin = None
+        rope = cfg.pos == "rope"
+        if rope:
+            sin, cos = _rope_sincos(pos, hd, cfg.rope_theta)
+        y, kn, vn = layer_plan.step_plan_matmul(
+            self.stages, n_heads=cfg.n_heads, n_kv_heads=nkv, head_dim=hd,
+            d_ff=cfg.d_ff, norm=cfg.norm, rope=rope,
+            x0=x[:, 0, :].astype(jnp.float32).T, pos=pos, cos=cos, sin=sin,
+            ln1=self.ln1, ln2=self.ln2, kc=kc, vc=vc, kpos=kpos,
+            interpret=self.executor.interpret)
+        dt = k_state.dtype
+        kn, vn = kn.astype(dt), vn.astype(dt)
+        if tbl is None:
+            smax = k_state.shape[2]
+            sel = jax.nn.one_hot(pos, smax, dtype=dt)
+            grow = sel[None, :, :, None, None]
+            new = {"k": k_state * (1 - grow) + grow * kn[:, :, None],
+                   "v": v_state * (1 - grow) + grow * vn[:, :, None],
+                   "kpos": jnp.where(sel[None] > 0, pos[None, :, None], kpos)}
+        else:
+            bs = k_state.shape[2]
+            w = jnp.maximum(pos, 0)
+            bidx = jnp.take_along_axis(tbl, (w // bs)[:, None], axis=1)[:, 0]
+            # inactive slots (pos == -1) scatter into the null block; their
+            # kpos stays -1 so the stale row is never attended to
+            bidx = jnp.where(pos >= 0, bidx, 0)
+            sel = jax.nn.one_hot(pos, kpos.shape[2])
+            new = {"k": k_state.at[:, bidx, w % bs].set(kn),
+                   "v": v_state.at[:, bidx, w % bs].set(vn),
+                   "kpos": jnp.where(sel[None] > 0, pos[None, :, None], kpos),
+                   "block_tbl": tbl}
+        return y.T[:, None, :].astype(x.dtype), new
+
+
+class MoEPlan:
+    """One MoE layer's expert FFNs as a single launch.
+
+    Two stages over flattened expert buffers — A: all gates+ups from
+    ``[E*d, C]``, B: all downs from the in-kernel SwiGLU ``[E*dff, C]`` —
+    replacing the three grouped ``expert_mm`` dispatches per layer.
+    """
+
+    def __init__(self, executor, site_tag: str, *, n_experts: int,
+                 d_model: int, d_ff: int):
+        from repro.kernels import ops
+
+        self.executor = executor
+        art = executor.artifact
+        e, d, dff = n_experts, d_model, d_ff
+
+        def spec(name, out_off, src_off):
+            rec = art.records[name]
+            packed = art.packed.get(name)
+            if packed is None:
+                packed = ops.pack_decomposition(rec.decomposition,
+                                                executor.block)
+            return {"kind": "lcc", "name": name, "out_off": out_off,
+                    "src_off": src_off,
+                    "kept": np.asarray(rec.kept_columns, np.int64),
+                    "labels": (np.asarray(rec.shared.labels, np.int64)
+                               if rec.shared is not None else None),
+                    "n_clusters": (rec.shared.n_clusters
+                                   if rec.shared is not None else 0),
+                    "packed": packed, "bias": None}
+
+        sa, sb, names = [], [], []
+        for ei in range(e):
+            sa.append(spec(f"moe.gate.{site_tag}.e{ei}", ei * dff, ei * d))
+            sa.append(spec(f"moe.up.{site_tag}.e{ei}",
+                           e * dff + ei * dff, ei * d))
+            sb.append(spec(f"moe.down.{site_tag}.e{ei}", ei * d, ei * dff))
+            names += [f"moe.{p}.{site_tag}.e{ei}"
+                      for p in ("gate", "up", "down")]
+        key = f"moe:{site_tag}"
+        pre = art.plans.get(key) if hasattr(art, "plans") else None
+        if pre is not None:
+            self.stages = pre
+        else:
+            self.stages = {
+                "a": ops.pack_stage([sa], d_src=e * d, out_dim=2 * e * dff),
+                "b": ops.pack_stage([sb], d_src=e * dff, out_dim=e * d)}
+            if hasattr(art, "plans"):
+                art.plans[key] = self.stages
+        self.covered = frozenset(names)
+        self.d_ff_total = e * dff
+
+    def __call__(self, buf):
+        """buf [E, C, d] dispatched tokens -> [E, C, d] expert outputs."""
+        from repro.kernels import layer_plan
+
+        self.executor.routed.update(self.covered)
+        e, c, d = buf.shape
+        src = buf.astype(jnp.float32).transpose(0, 2, 1).reshape(e * d, c)
+        out = layer_plan.moe_plan_matmul(
+            self.stages["a"], self.stages["b"], d_ff_total=self.d_ff_total,
+            src=src, interpret=self.executor.interpret)
+        return out.reshape(e, d, c).transpose(0, 2, 1).astype(buf.dtype)
+
+
 def matvecs_from_artifact(artifact, *, include=None, block: int = 128,
                           interpret: bool | None = None) -> dict[str, LCCMatvec]:
     """Per-site :class:`LCCMatvec` table for an artifact's dense records.
@@ -264,13 +458,26 @@ class CompressedExecutor:
 
     ``routed`` records (at trace time) every site actually served by a fused
     kernel — tests assert it covers the artifact, and the engine reports it.
+
+    Layer plans (``use_plans=True``, the default): on the interpreter path
+    the executor additionally builds *layer plans* — ``step_plan(cfg)``
+    collapses a whole dense-family decode step into one launch,
+    ``moe_plan(...)`` collapses an MoE layer's expert FFNs — and the models
+    consult them before falling back to the per-region grouped route.
+    Compiled TPU keeps the per-region kernels (the plan kernels are
+    gather/scatter-shaped, which Mosaic does not support in-kernel), so
+    ``use_plans`` is ANDed with ``resolve_interpret``.
     """
 
     def __init__(self, artifact, *, block: int = 128,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None, use_plans: bool = True):
+        from repro.kernels.dispatch import resolve_interpret
+
         self.artifact = artifact
         self.block = block
         self.interpret = interpret
+        self.use_plans = bool(use_plans) and resolve_interpret(interpret)
+        self._plans: dict[str, object] = {}
         self._matvecs = matvecs_from_artifact(artifact, block=block,
                                               interpret=interpret)
         self._convs: dict[str, ConvLCC] = {}
@@ -285,10 +492,14 @@ class CompressedExecutor:
                        for s in ca.sites_for(artifact.params, artifact.config)
                        if isinstance(s, ca.ConvSite)}
             for name in conv_names:
-                self._convs[name] = ConvLCC(
+                cv = ConvLCC(
                     name, kernels[name], artifact.records[name],
                     artifact.unit_config_for(name).conv_method,
                     block=block, interpret=interpret)
+                self._convs[name] = cv
+                if cv.group is not None and cv.group.waste is not None:
+                    artifact.pipeline_stats.setdefault(
+                        "padding_waste", {})[name] = cv.group.waste
 
     @property
     def sites(self) -> set[str]:
@@ -312,9 +523,12 @@ class CompressedExecutor:
                 # reuse the eagerly-packed per-site buffers: group assembly
                 # happens at trace time and must only touch concrete arrays
                 packed = [self._matvecs[n].packed for n in names]
-                self._groups[names] = GroupedLCCMatvec(
-                    recs, packed=packed, block=self.block,
-                    interpret=self.interpret)
+                g = GroupedLCCMatvec(recs, packed=packed, block=self.block,
+                                     interpret=self.interpret)
+                self._groups[names] = g
+                if g.group.waste is not None:
+                    self.artifact.pipeline_stats.setdefault(
+                        "padding_waste", {})["+".join(names)] = g.group.waste
             else:
                 self._groups[names] = None
         g = self._groups[names]
@@ -327,3 +541,77 @@ class CompressedExecutor:
         if fn is not None:
             self.routed.add(name)
         return fn
+
+    # -- layer plans --------------------------------------------------------
+
+    def step_plan(self, cfg):
+        """Whole-decode-step plan for the dense transformer family, or None.
+
+        Built once per executor and cached; eligibility is conservative —
+        anything the step kernel does not model (MoE/MLA/ssm/hybrid layers,
+        windowed attention, encoder-decoder, learned positions, non-f32
+        compute dtype, compiled TPU backend) falls back to the per-region
+        grouped route, which covers every family.
+        """
+        if not self.use_plans:
+            return None
+        if "step" not in self._plans:
+            self._plans["step"] = self._build_step_plan(cfg)
+        plan = self._plans["step"]
+        if plan is not None:
+            self.routed.update(plan.covered)
+        return plan
+
+    def _build_step_plan(self, cfg):
+        eligible = (
+            getattr(cfg, "moe", None) is None
+            and getattr(cfg, "mla", None) is None
+            and getattr(cfg, "family", "") not in ("ssm", "hybrid")
+            and getattr(cfg, "enc_layers", 0) == 0
+            and getattr(cfg, "attn_window", None) is None
+            and getattr(cfg, "pos", "rope") in ("rope", "none")
+            and getattr(cfg, "norm", "rms") in ("rms", "nonparam")
+            and jnp.zeros((), cfg.cdtype).dtype == jnp.float32
+            and bool(self._matvecs))
+        if not eligible:
+            return None
+        try:
+            return StepPlan(self, cfg)
+        except Exception as exc:  # defensive: plan failure must not kill decode
+            import warnings
+
+            warnings.warn(f"step plan build failed ({exc}); "
+                          "falling back to per-region kernels")
+            return None
+
+    def moe_plan(self, site_tag: str, *, n_experts: int, d_model: int,
+                 d_ff: int):
+        """Single-launch plan for one MoE layer's expert FFNs, or None."""
+        if not self.use_plans:
+            return None
+        key = f"moe:{site_tag}"
+        if key not in self._plans:
+            names = [f"moe.{p}.{site_tag}.e{e}" for e in range(n_experts)
+                     for p in ("gate", "up", "down")]
+            plan = None
+            if (all(n in self._matvecs for n in names)
+                    and jnp.zeros((), self.artifact.config.cdtype).dtype
+                    == jnp.float32):
+                try:
+                    plan = MoEPlan(self, site_tag, n_experts=n_experts,
+                                   d_model=d_model, d_ff=d_ff)
+                except Exception as exc:
+                    import warnings
+
+                    warnings.warn(f"moe plan build failed ({exc}); "
+                                  "falling back to per-region kernels")
+            self._plans[key] = plan
+        plan = self._plans[key]
+        if plan is not None:
+            self.routed.update(plan.covered)
+        return plan
+
+    @property
+    def n_layer_plans(self) -> int:
+        """Distinct layer plans built (a whole-step plan counts once)."""
+        return sum(1 for p in self._plans.values() if p is not None)

@@ -153,10 +153,11 @@ def test_engine_decode_runs_fused_kernel(dense_artifact, monkeypatch):
     """ServingEngine(artifact=...) routes every compressed site (FFN *and*
     attention) through fused kernel launches inside the jitted decode step,
     and its logits match the dense-effective forward to <= 1e-4."""
-    from repro.kernels import ops
+    from repro.kernels import layer_plan, ops
 
-    calls = {"chain": 0, "group": 0}
+    calls = {"chain": 0, "group": 0, "plan": 0}
     real_chain, real_group = ops.lcc_chain_matmul, ops.lcc_group_matmul
+    real_plan = layer_plan.step_plan_matmul
 
     def counting_chain(*a, **k):
         calls["chain"] += 1
@@ -166,8 +167,13 @@ def test_engine_decode_runs_fused_kernel(dense_artifact, monkeypatch):
         calls["group"] += 1
         return real_group(*a, **k)
 
+    def counting_plan(*a, **k):
+        calls["plan"] += 1
+        return real_plan(*a, **k)
+
     monkeypatch.setattr(ops, "lcc_chain_matmul", counting_chain)
     monkeypatch.setattr(ops, "lcc_group_matmul", counting_group)
+    monkeypatch.setattr(layer_plan, "step_plan_matmul", counting_plan)
 
     cfg = dense_artifact.config
     eng = ServingEngine(artifact=dense_artifact, n_slots=2, max_len=32)
@@ -175,9 +181,12 @@ def test_engine_decode_runs_fused_kernel(dense_artifact, monkeypatch):
     assert eng.executor.sites == set(dense_artifact.records)
     res = eng.generate([[3, 1, 4], [1, 5]], max_new_tokens=4)
     assert all(r.finished for r in res)
-    assert calls["chain"] + calls["group"] > 0, \
+    assert calls["chain"] + calls["group"] + calls["plan"] > 0, \
         "fused kernels were never traced into the decode step"
-    assert calls["group"] > 0, "no fused-region (grouped) launch was traced"
+    # either the whole-stack layer plan fired (one launch per step) or the
+    # per-region route traced at least one grouped launch
+    assert calls["plan"] > 0 or calls["group"] > 0, \
+        "neither a layer-plan nor a fused-region (grouped) launch was traced"
     # every compressed site dispatched through a fused kernel — nothing fell
     # back to the dense-effective matmul on the hot path
     assert eng.executor.routed == eng.executor.sites

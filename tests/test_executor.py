@@ -271,3 +271,188 @@ def test_compressed_adds_metric():
     # top_k=1 of 2 experts: the active view charges half of each expert stack
     assert m["active_baseline_adds"] < m["baseline_adds"]
     assert m["active_ratio"] > 1.0
+
+
+# --------------------------------------------------------------- layer plans
+
+
+def test_step_plan_decode_parity_all_sites():
+    """Whole-step layer plan == per-region kernels == dense-effective decode
+    (<= 1e-4), with every site routed and exactly one plan built."""
+    cfg = reduced_config(get_arch("olmo-1b"), d_model=32, n_heads=2,
+                         n_kv_heads=2, head_dim=16, d_ff=48, vocab=64,
+                         n_layers=2)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    art = api.compress_model(params, cfg, _fp())
+    batch, smax = 2, 8
+    state = api.init_decode_state(cfg, batch, smax)
+    tok = jnp.asarray([[3]] * batch, jnp.int32)
+    pos = jnp.asarray([0] * batch, jnp.int32)
+
+    ex_plan = CompressedExecutor(art, interpret=None)
+    ex_reg = CompressedExecutor(art, interpret=None, use_plans=False)
+    run = lambda ex: jax.jit(
+        lambda p: api.decode(p, cfg, state, tok, pos, executor=ex))(art.params)
+    l_plan, s_plan = run(ex_plan)
+    l_reg, _ = run(ex_reg)
+    l_d, s_d = jax.jit(lambda p: api.decode(p, cfg, state, tok, pos))(art.params)
+
+    assert float(jnp.abs(l_plan - l_d).max()) <= 1e-4
+    assert float(jnp.abs(l_plan - l_reg).max()) <= 1e-4
+    assert ex_plan.n_layer_plans == 1
+    assert ex_plan.routed == ex_plan.sites
+    for leaf in ("k", "v", "kpos"):  # KV write-back outside the kernel
+        d = jnp.abs(s_plan[leaf].astype(jnp.float32)
+                    - s_d[leaf].astype(jnp.float32))
+        assert float(d.max()) <= 1e-4, leaf
+    # a second step from the plan-updated state keeps tracking dense
+    tok2 = jnp.asarray([[5]] * batch, jnp.int32)
+    pos2 = jnp.asarray([1] * batch, jnp.int32)
+    l2p, _ = jax.jit(lambda p: api.decode(p, cfg, s_plan, tok2, pos2,
+                                          executor=ex_plan))(art.params)
+    l2d, _ = jax.jit(lambda p: api.decode(p, cfg, s_d, tok2, pos2))(art.params)
+    assert float(jnp.abs(l2p - l2d).max()) <= 1e-4
+
+
+def test_step_plan_bakes_uncovered_sites_dense():
+    """An FFN-only artifact still gets a whole-step plan: attention q/k/v/o
+    ride along as baked dense blocks, and the plan builds lazily inside the
+    jitted trace without touching traced params."""
+    cfg = reduced_config(get_arch("olmo-1b"), d_model=32, n_heads=2,
+                         n_kv_heads=2, head_dim=16, d_ff=48, vocab=64,
+                         n_layers=2)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    art = api.compress_model(params, cfg, _fp(),
+                             include=lambda n: n.startswith("ffn."))
+    assert all(n.startswith("ffn.") for n in art.records)
+    ex = CompressedExecutor(art, interpret=None)
+    state = api.init_decode_state(cfg, 2, 8)
+    tok = jnp.asarray([[3]] * 2, jnp.int32)
+    pos = jnp.asarray([0] * 2, jnp.int32)
+    l_k, _ = jax.jit(lambda p: api.decode(p, cfg, state, tok, pos,
+                                          executor=ex))(art.params)
+    l_d, _ = jax.jit(lambda p: api.decode(p, cfg, state, tok, pos))(art.params)
+    assert ex.n_layer_plans == 1  # the lazy in-trace build must not fall back
+    assert float(jnp.abs(l_k - l_d).max()) <= 1e-4
+    assert ex.routed == ex.sites == set(art.records)
+
+
+def test_moe_plan_executor_parity():
+    """MoE layer plan (all experts' gate+up, SwiGLU, down in one launch) ==
+    per-region grouped kernels == dense-effective decode."""
+    cfg = reduced_config(
+        get_arch("mixtral-8x22b"), d_model=32, n_heads=2, n_kv_heads=2,
+        head_dim=16, vocab=64, n_layers=1,
+        moe=MoESpec(n_experts=2, top_k=1, d_ff_expert=16, capacity_factor=8.0))
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    art = api.compress_model(params, cfg, _fp())
+    state = api.init_decode_state(cfg, 2, 8)
+    tok = jnp.asarray([[3]] * 2, jnp.int32)
+    pos = jnp.asarray([0] * 2, jnp.int32)
+    ex_plan = CompressedExecutor(art, interpret=None)
+    ex_reg = CompressedExecutor(art, interpret=None, use_plans=False)
+    run = lambda ex: jax.jit(
+        lambda p: api.decode(p, cfg, state, tok, pos, executor=ex))(art.params)
+    l_plan, _ = run(ex_plan)
+    l_reg, _ = run(ex_reg)
+    l_d, _ = jax.jit(lambda p: api.decode(p, cfg, state, tok, pos))(art.params)
+    assert float(jnp.abs(l_plan - l_d).max()) <= 1e-4
+    assert float(jnp.abs(l_plan - l_reg).max()) <= 1e-4
+    assert ex_plan.n_layer_plans == cfg.n_layers  # one MoE plan per layer
+    assert ex_plan.routed == ex_plan.sites
+
+
+def test_engine_step_plan_single_launch():
+    """Engine-level (paged KV): plan tokens == dense tokens AND the measured
+    Pallas launches per fused decode step equals the number of layer plans."""
+    from repro.serving.engine import ServingEngine
+
+    cfg = reduced_config(get_arch("olmo-1b"), d_model=32, n_heads=2,
+                         n_kv_heads=2, head_dim=16, d_ff=48, vocab=64,
+                         n_layers=2)
+    params = api.init_params(jax.random.PRNGKey(1), cfg)
+    art = api.compress_model(params, cfg, _fp())
+    eng_k = ServingEngine(artifact=art, n_slots=2, max_len=32)
+    eng_d = ServingEngine(artifact=art, n_slots=2, max_len=32,
+                          use_kernel=False)
+    prompt = [5, 9, 2, 7]
+    out_k = eng_k.generate([prompt], max_new_tokens=8, temperature=0.0)
+    out_d = eng_d.generate([prompt], max_new_tokens=8, temperature=0.0)
+    assert [r.tokens for r in out_k] == [r.tokens for r in out_d]
+    assert eng_k.n_layer_plans == 1
+    assert eng_k.pallas_launches_per_step == eng_k.n_layer_plans == 1
+
+
+def test_pack_group_padding_waste_reported():
+    """pack_group reports the zero-row / zero-slice padding fractions of the
+    stacked [G, E, P, N, S] slab, and the executor mirrors them into the
+    artifact's pipeline_stats."""
+    from repro.core.lcc import lcc_decompose
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(3)
+    decs = [lcc_decompose(rng.standard_normal(shape), algorithm="fp",
+                          target_snr_db=35.0)
+            for shape in [(48, 16), (8, 16), (12, 12)]]
+    pg = ops.pack_group([ops.pack_decomposition(d) for d in decs])
+    w = pg.waste
+    assert w is not None
+    assert len(w["row_waste"]) == len(decs)
+    assert all(0.0 <= f <= 1.0 for f in w["row_waste"])
+    # the (8, 16) member pads against the 48-row member: real waste shows up
+    assert max(w["row_waste"]) > 0.0
+    assert 0.0 <= w["mean_row_waste"] <= 1.0
+
+    cfg = reduced_config(get_arch("olmo-1b"), d_model=32, n_heads=2,
+                         n_kv_heads=2, head_dim=16, d_ff=48, vocab=64,
+                         n_layers=1)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    art = api.compress_model(params, cfg, _fp())
+    ex = CompressedExecutor(art, interpret=None, use_plans=False)
+    state = api.init_decode_state(cfg, 1, 8)
+    tok = jnp.asarray([[3]], jnp.int32)
+    pos = jnp.asarray([0], jnp.int32)
+    jax.jit(lambda p: api.decode(p, cfg, state, tok, pos,
+                                 executor=ex))(art.params)
+    pw = art.pipeline_stats.get("padding_waste", {})
+    assert pw, "grouped regions must record their padding waste"
+    assert all(0.0 <= v["mean_row_waste"] <= 1.0 for v in pw.values())
+
+
+def test_artifact_plans_roundtrip(tmp_path):
+    """Packed layer-plan stages persist through save/load, and a fresh
+    executor on the loaded artifact reuses them (same decode numerics)."""
+    cfg = reduced_config(get_arch("olmo-1b"), d_model=32, n_heads=2,
+                         n_kv_heads=2, head_dim=16, d_ff=48, vocab=64,
+                         n_layers=2)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    art = api.compress_model(params, cfg, _fp())
+    ex = CompressedExecutor(art, interpret=None)
+    assert ex.step_plan(cfg) is not None  # builds + stores into art.plans
+    assert "step" in art.plans
+
+    d = str(tmp_path / "plan_art")
+    art.save(d)
+    art2 = CompressedModel.load(d)
+    assert "step" in art2.plans
+    for name, ps in art.plans["step"].items():
+        ps2 = art2.plans["step"][name]
+        assert ps2.k_alloc == ps.k_alloc and ps2.out_dim == ps.out_dim
+        for f in ("prep_src", "prep_tgt", "gidx", "gexp", "gsgn", "outg",
+                  "fs_mat", "dw_mat", "bias"):
+            a, b = getattr(ps, f), getattr(ps2, f)
+            assert (a is None) == (b is None), (name, f)
+            if a is not None:
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    ex2 = CompressedExecutor(art2, interpret=None)
+    state = api.init_decode_state(cfg, 1, 8)
+    tok = jnp.asarray([[3]], jnp.int32)
+    pos = jnp.asarray([0], jnp.int32)
+    l1, _ = jax.jit(lambda p: api.decode(p, cfg, state, tok, pos,
+                                         executor=ex))(art.params)
+    l2, _ = jax.jit(lambda p: api.decode(p, cfg, state, tok, pos,
+                                         executor=ex2))(art2.params)
+    assert ex2.n_layer_plans == 1
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=1e-6, atol=1e-6)

@@ -327,3 +327,100 @@ def test_group_prox_zero_rows_boundary_unaligned():
     assert (got[9] == 0.0).all()
     assert np.abs(got[11]).max() > 0.0
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# CSD shift-add layer-plan stage vs ref oracles (bitwise)
+# ---------------------------------------------------------------------------
+
+def _csd_stage(idx, exp, sgn, k_in):
+    """Hand-build a 1-layer PackedStage around a raw CSD chain [P, R, S]."""
+    from repro.kernels.ops import PackedStage
+
+    p, r, s = idx.shape
+    return PackedStage(
+        prep_src=np.arange(k_in, dtype=np.int32)[None],
+        prep_tgt=np.arange(k_in, dtype=np.int32)[None],
+        gidx=np.asarray(idx, np.int32)[None],
+        gexp=np.asarray(exp, np.int8)[None],
+        gsgn=np.asarray(sgn, np.int8)[None],
+        outg=np.arange(r, dtype=np.int32)[None, None],
+        fs_mat=None, dw_mat=None, bias=None,
+        k_alloc=k_in + 1, d_src=k_in, out_dim=r, n_layers=1,
+        site_names=("synthetic",))
+
+
+def test_stage_matmul_csd_shift_add_bitwise_vs_ref():
+    """The one-launch CSD shift-add stage matches the densify-then-matmul
+    oracle BITWISE: every operand is a signed power of two times an integer
+    input, all intermediates are dyadic rationals far inside the f32 mantissa,
+    so both evaluation orders are exact and must agree to the last bit."""
+    from repro.kernels import layer_plan
+
+    rng = np.random.default_rng(11)
+    k_in, r, p, s, b = 8, 8, 3, 2, 5
+    idx = rng.integers(0, k_in, (p, r, s))
+    exp = rng.integers(-2, 3, (p, r, s))
+    sgn = rng.choice([-1, 0, 1], (p, r, s))
+    sgn[1, 2] = 0  # a fully-dead row: must decompress to exactly 0.0
+    x = np.asarray(rng.integers(-4, 5, (k_in, b)), np.float32)
+
+    factors = [(jnp.asarray(idx[q], jnp.int32), jnp.asarray(exp[q], jnp.int8),
+                jnp.asarray(sgn[q], jnp.int8)) for q in range(p)]
+    want = np.asarray(ref.lcc_chain_apply_ref(factors, jnp.asarray(x)))
+
+    ps = _csd_stage(idx, exp, sgn, k_in)
+    got = np.asarray(layer_plan.stage_matmul(ps, jnp.asarray(x)[None]))[0]
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("p", [3, 4])
+def test_fuse_csd_levels_bitwise(p):
+    """Level fusion composes signed powers of two exactly: the fused stage
+    must agree bitwise with both the unfused stage and the ref chain, for an
+    even level count (full pairwise fusion) and an odd one (unfused tail)."""
+    from repro.kernels import layer_plan
+
+    rng = np.random.default_rng(100 + p)
+    k_in, r, s, b = 8, 8, 2, 4
+    idx = rng.integers(0, k_in, (p, r, s))
+    exp = rng.integers(-2, 3, (p, r, s))
+    sgn = rng.choice([-1, 0, 1], (p, r, s))
+    sgn[0, 5] = 0  # dead parent row: fused terms through it must go dead too
+    x = np.asarray(rng.integers(-4, 5, (k_in, b)), np.float32)
+
+    factors = [(jnp.asarray(idx[q], jnp.int32), jnp.asarray(exp[q], jnp.int8),
+                jnp.asarray(sgn[q], jnp.int8)) for q in range(p)]
+    want = np.asarray(ref.lcc_chain_apply_ref(factors, jnp.asarray(x)))
+
+    fi, fe, fs = ops._fuse_csd_levels(idx, exp, sgn)
+    assert fi.shape[0] == (p + 1) // 2  # depth halved (odd tail rides along)
+    got = np.asarray(layer_plan.stage_matmul(
+        _csd_stage(fi, fe, fs, k_in), jnp.asarray(x)[None]))[0]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_stage_matmul_csd_digits_reproduce_constants():
+    """A 1-level stage built from ``csd_digits`` of real coefficients applies
+    exactly c * x: shift-add reconstruction of a CSD-coded scalar is bitwise
+    identical to the direct multiply for dyadic c and integer x."""
+    from repro.core.csd import csd_digits
+    from repro.kernels import layer_plan
+
+    consts = [2.5, -3.75, 0.625, 1.0]
+    digits = [csd_digits(c) for c in consts]
+    s = max(len(d) for d in digits)
+    r = len(consts)
+    idx = np.zeros((1, r, s), np.int64)  # every row reads input row 0
+    exp = np.zeros((1, r, s), np.int64)
+    sgn = np.zeros((1, r, s), np.int64)
+    for i, dig in enumerate(digits):
+        for j, (e, z) in enumerate(dig):
+            exp[0, i, j], sgn[0, i, j] = e, z
+
+    rng = np.random.default_rng(3)
+    x = np.asarray(rng.integers(-8, 9, (1, 6)), np.float32)
+    got = np.asarray(layer_plan.stage_matmul(
+        _csd_stage(idx, exp, sgn, 1), jnp.asarray(x)[None]))[0]
+    want = np.asarray(consts, np.float32)[:, None] * x
+    np.testing.assert_array_equal(got, want)
