@@ -28,15 +28,14 @@ assert all(v['ratio'] > 1 for v in r['adds'].values()), r['adds']; \
 assert all(p['errors'] == 0 for p in r['poisson']), r['poisson']; \
 assert r['prefix_cache']['speedup'] >= 2, r['prefix_cache']; \
 assert r['prefix_cache']['leaked_blocks'] == 0, r['prefix_cache']"
-# perf gate: one measured Pallas launch per layer plan, and the smoke's
-# compressed decode must not fall below 0.8x the tracked full-bench number
-# (the smoke model is far smaller, so a pass means the plan path engaged)
+# perf gate: the smoke's compressed decode must not fall below 0.8x the
+# tracked full-bench number (the smoke model is far smaller, so a pass means
+# the plan path engaged), and full telemetry must cost <= 3% decode tok/s.
+# The one-launch-per-layer-plan invariant is gated below from a live
+# engine's own metrics file (telemetry smoke), not from bench plumbing.
 python - <<'EOF'
 import json
 r = json.load(open("/tmp/BENCH_serving.json"))
-for x in r["results"]:
-    if x["arch"] == "olmo-1b" and x["mode"].startswith("compressed"):
-        assert x["pallas_launches"] == x["n_layer_plans"] > 0, x
 smoke = next(x["decode_tok_s"] for x in r["results"]
              if x["arch"] == "olmo-1b" and x["mode"] == "compressed"
              and x["n_slots"] == 8)
@@ -47,7 +46,44 @@ base = next(x["decode_tok_s"] for x in tracked["results"]
 assert smoke >= 0.8 * base, (
     f"compressed decode regressed: smoke {smoke} tok/s < 0.8x tracked {base}")
 assert r["roofline"] and all(s["sites"] for s in r["roofline"])
-print(f"perf gate OK: launches==plans, {smoke} tok/s >= 0.8x tracked {base}")
+# telemetry's cost is a fixed ~tens-of-us per step, so judge it against the
+# tracked full-bench engine's step wall (the smoke engine's sub-ms steps
+# would overstate the fraction by the model-size ratio)
+ob = r["obs_overhead"]
+ovh = ob["overhead_s_per_step"] / (ob["n_slots"] / base)
+assert ovh <= 0.03, (
+    f"telemetry overhead {ob['overhead_s_per_step'] * 1e6:.0f} us/step = "
+    f"{ovh:.2%} of the tracked engine's step > 3% budget")
+print(f"perf gate OK: {smoke} tok/s >= 0.8x tracked {base}, telemetry "
+      f"{ob['overhead_s_per_step'] * 1e6:+.0f} us/step ({ovh:.2%} of step)")
+EOF
+
+echo "== telemetry smoke (120s budget) =="
+# a compressed serve run with full telemetry: every span must close, and the
+# live engine's own metrics file must show exactly one Pallas launch per
+# layer plan (the executor invariant, gated from telemetry rather than bench
+# internals)
+timeout 120 python -m repro.launch.serve --reduced --compress --kernel \
+    --requests 2 --max-new 8 --slots 2 \
+    --metrics-out /tmp/obs_metrics.json --trace-out /tmp/obs_trace.jsonl
+python - <<'EOF'
+import json
+spans = [json.loads(l) for l in open("/tmp/obs_trace.jsonl")]
+assert len(spans) == 2, spans
+assert all(s["status"] == "ok" for s in spans), spans
+m = json.load(open("/tmp/obs_metrics.json"))["metrics"]
+launches = max(v["value"]
+               for v in m["serving_pallas_launches_per_step"]["values"])
+plans = m["serving_layer_plans"]["values"][0]["value"]
+assert launches == plans > 0, (launches, plans)
+assert m["serving_requests_total"]["values"] == [
+    {"labels": {"status": "ok"}, "value": 2}], m["serving_requests_total"]
+assert m["pallas_launches_total"]["values"][0]["value"] > 0
+roof = json.load(open("/tmp/obs_metrics.json"))["live_roofline"]
+assert roof and roof["sites"] and roof["achieved_adds_per_s"] > 0, roof
+print(f"telemetry smoke OK: 2/2 spans closed, {int(launches)} launches == "
+      f"{int(plans)} layer plans, live roofline "
+      f"{roof['achieved_adds_per_s']} adds/s")
 EOF
 
 echo "== paged KV prefix-sharing smoke (60s budget) =="

@@ -37,12 +37,23 @@ def resolve_interpret(interpret: bool | None) -> bool:
 # ``pallas_launches`` and the 1-launch-per-layer claim is measured against.
 
 _launch_count = 0
+_launch_metric = None  # lazily resolved obs counter (process-global registry)
 
 
 def record_launch(n: int = 1) -> None:
-    """Count ``n`` Pallas launches emitted by the current (trace-time) call."""
-    global _launch_count
+    """Count ``n`` Pallas launches emitted by the current (trace-time) call.
+
+    Also published as the live ``pallas_launches_total`` counter in the
+    process-global :mod:`repro.obs` registry (resolved lazily so importing
+    this module stays free of any obs setup cost)."""
+    global _launch_count, _launch_metric
     _launch_count += n
+    if _launch_metric is None:
+        from repro.obs import get_global
+        _launch_metric = get_global().counter(
+            "pallas_launches_total",
+            "Pallas launches recorded at trace time, process-wide")
+    _launch_metric.inc(n)
 
 
 def launch_count() -> int:

@@ -104,9 +104,14 @@ def main() -> None:
     ap.add_argument("--conv-subsample", type=int, default=None)
     ap.add_argument("--quiet", action="store_true",
                     help="suppress per-slice progress events")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the run's metrics snapshot as JSON at exit")
     args = ap.parse_args()
 
     from repro.models import api
+    from repro.obs import MetricsRegistry, dump_metrics, get_global
+
+    metrics = MetricsRegistry() if args.metrics_out else None
 
     params, cfg = build_model(args.arch, args.quickstart, args.seed)
     family = api.family_of(cfg)
@@ -131,6 +136,7 @@ def main() -> None:
         run_dir=os.path.join(args.out, "run"),
         resume=args.resume,
         progress=progress,
+        metrics=metrics,
     )
     art.save(os.path.join(args.out, "artifact"))
     wall = time.time() - t0
@@ -150,6 +156,14 @@ def main() -> None:
     with open(os.path.join(args.out, "stats.json"), "w") as f:
         json.dump(stats, f, indent=2)
         f.write("\n")
+    if args.metrics_out:
+        metrics.gauge("pipeline_adds", "artifact adds by stage",
+                      labels=("stage",)).set(art.report.total_baseline(),
+                                             stage="baseline")
+        metrics.gauge("pipeline_adds", "artifact adds by stage",
+                      labels=("stage",)).set(lcc, stage="lcc")
+        dump_metrics(args.metrics_out, [get_global(), metrics])
+        print(f"wrote {args.metrics_out}")
     print(f"artifact -> {os.path.join(args.out, 'artifact')}")
 
 

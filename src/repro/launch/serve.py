@@ -14,7 +14,7 @@ import time
 import jax
 
 import repro.core as core
-from repro import compat
+from repro import compat, obs
 from repro.configs import get_arch, reduced_config
 from repro.data.synthetic import MarkovLM
 from repro.models import api
@@ -62,6 +62,14 @@ def main() -> None:
                     default=True,
                     help="share prefilled prompt-prefix blocks across "
                          "requests (copy-on-write; paged engines only)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the merged metrics snapshot (+ trace summary "
+                         "and live roofline) as JSON at exit")
+    ap.add_argument("--trace-out", default=None,
+                    help="write per-request spans as JSONL at exit")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve GET /metrics (Prometheus text) on this port "
+                         "for the run's duration (0 = ephemeral)")
     args = ap.parse_args()
     if args.kernel and not args.compress:
         ap.error("--kernel routes a compressed artifact; pass --compress too")
@@ -83,7 +91,7 @@ def main() -> None:
     prompts = [lm.sample(1, 8, seed=100 + i)[0, :8].tolist()
                for i in range(args.requests)]
     kv = dict(kv_block=args.kv_block or None, kv_blocks=args.kv_blocks,
-              prefix_cache=args.prefix_cache)
+              prefix_cache=args.prefix_cache, tracer=True)
     if artifact is not None:
         eng = ServingEngine(artifact=artifact, n_slots=args.slots, max_len=128,
                             temperature=args.temperature,
@@ -93,6 +101,11 @@ def main() -> None:
         eng = ServingEngine(params, cfg, n_slots=args.slots, max_len=128,
                             temperature=args.temperature,
                             mesh=build_mesh(args.dp, args.tp), **kv)
+    registries = [obs.get_global(), eng.metrics]
+    srv = None
+    if args.metrics_port is not None:
+        srv = obs.start_metrics_server(registries, port=args.metrics_port)
+        print(f"metrics: http://127.0.0.1:{srv.server_port}/metrics")
     sched = Scheduler(eng)
     on_token = ((lambda rid, tok: print(f"  req{rid} += {tok}", flush=True))
                 if args.stream else None)
@@ -114,7 +127,7 @@ def main() -> None:
     print(f"{tok} tokens in {dt:.1f}s ({tok / dt:.1f} tok/s, "
           f"{args.slots} slots, {eng.step_dispatches} dispatches, {where})")
     ps = eng.pool_stats()
-    if ps:
+    if ps["n_blocks"]:
         print(f"kv pool: {ps['n_blocks']} blocks x {ps['block_size']} tok, "
               f"peak {ps['peak_in_use_blocks']} in use, "
               f"prefix hit-rate {ps['prefix_hit_rate']:.2f} "
@@ -122,6 +135,41 @@ def main() -> None:
               f"{ps['evictions']} evictions, "
               f"{sched.admitted_while_running} continuous admissions, "
               f"{sched.mem_stalls} block stalls")
+
+    # -------------------------------------------------- end-of-run telemetry
+    tsum = eng.tracer.summary()
+    prof = eng.profiler.summary()
+
+    def ms(v):
+        return "-" if v is None else f"{v * 1e3:8.1f}"
+
+    print("telemetry summary")
+    print(f"  {'metric':<14}{'p50 ms':>10}{'p99 ms':>10}{'n':>6}")
+    for name in ("queue_wait_s", "ttft_s", "tpot_s", "e2e_s"):
+        st = tsum[name]
+        print(f"  {name[:-2]:<14}{ms(st['p50']):>10}{ms(st['p99']):>10}"
+              f"{st['n']:>6}")
+    print(f"  requests: {tsum['by_status']} ({tsum['open']} unclosed), "
+          f"decode steps {prof['steps']}"
+          + (f" @ {prof['tok_s']:.1f} tok/s" if prof["tok_s"] else ""))
+    live = obs.live_roofline(eng)
+    if live is not None:
+        print(f"  live roofline: {live['total_lcc_adds']} lcc adds/token x "
+              f"{live['decode_tok_s_n8']} tok/s = "
+              f"{live['achieved_adds_per_s']} adds/s "
+              f"({live['pallas_launches']} launches / "
+              f"{live['n_layer_plans']} plans per step)")
+    if args.trace_out:
+        n_open = eng.tracer.dump_jsonl(args.trace_out)
+        print(f"wrote {args.trace_out} ({tsum['completed']} spans, "
+              f"{n_open} unclosed)")
+    if args.metrics_out:
+        obs.dump_metrics(args.metrics_out, registries,
+                         trace_summary=tsum, profiler=prof,
+                         live_roofline=live)
+        print(f"wrote {args.metrics_out}")
+    if srv is not None:
+        srv.shutdown()
 
 
 if __name__ == "__main__":

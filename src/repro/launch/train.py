@@ -45,7 +45,9 @@ from repro.distributed import sharding
 from repro.distributed.act_shard import mesh_context
 from repro.distributed.elastic import plan_for_devices, reshard_tree
 from repro.optim.optimizers import adamw, cosine_warmup, prox_sgd
-from repro.training.trainer import TrainState, init_train_state, make_train_step
+from repro.obs import MetricsRegistry, dump_metrics, get_global
+from repro.training.trainer import (TrainState, init_train_state,
+                                    make_train_step, record_step_metrics)
 
 
 def build_mesh(spec: str | None):
@@ -69,6 +71,8 @@ def mlp_main(args) -> None:
     4. fused-serving check (whole-chain LCC kernel) + ``train_stats.json``.
     """
     import json
+
+    metrics = MetricsRegistry() if args.metrics_out else None
 
     from repro.data.mnist_like import train_test
     from repro.data.synthetic import batches
@@ -105,6 +109,9 @@ def mlp_main(args) -> None:
                   f"{sum(float(v['penalty']) for v in rep.values()):.3f}",
                   flush=True)
     acc = float(mlp_accuracy(params, xte_j, yte_j))
+    if metrics is not None:
+        metrics.gauge("train_accuracy", "held-out accuracy by stage",
+                      labels=("stage",)).set(acc, stage="dense")
     stats = {"arch": "mlp", "hidden": cfg.hidden, "prox": bool(args.prox),
              "lam": args.lam, "epochs": args.epochs, "batch": batch,
              "train_wall_s": round(time.time() - t0, 2),
@@ -120,6 +127,9 @@ def mlp_main(args) -> None:
              if specs else ""))
 
     if not args.compress_out:
+        if args.metrics_out:
+            dump_metrics(args.metrics_out, [get_global(), metrics])
+            print(f"wrote {args.metrics_out}")
         return
 
     # ---- handoff to the compression pipeline (launch/compress layout) ----
@@ -138,7 +148,7 @@ def mlp_main(args) -> None:
         n_workers=args.workers, budget_adds=args.budget,
         cache_dir=os.path.join(args.compress_out, "cache"),
         run_dir=os.path.join(args.compress_out, "run"),
-        progress=progress)
+        progress=progress, metrics=metrics)
     ps = art.pipeline_stats
     stats["pipeline"] = {k: int(ps.get(k, 0)) for k in
                          ("units", "jobs", "dead_groups", "skipped_jobs",
@@ -148,6 +158,9 @@ def mlp_main(args) -> None:
     stats["compress_wall_s"] = round(time.time() - t0, 2)
     acc_c = float(mlp_accuracy(art.params, xte_j, yte_j))
     stats["accuracy"]["compressed"] = acc_c
+    if metrics is not None:
+        metrics.gauge("train_accuracy", "held-out accuracy by stage",
+                      labels=("stage",)).set(acc_c, stage="compressed")
     print(f"compress: adds {stats['adds']['baseline']} -> "
           f"{stats['adds']['lcc']} (dead groups {ps['dead_groups']}, "
           f"skipped {ps['skipped_jobs']} jobs, shrunk {ps['shrunk_jobs']}); "
@@ -203,6 +216,9 @@ def mlp_main(args) -> None:
         json.dump(stats, f, indent=2)
         f.write("\n")
     print(f"artifact -> {os.path.join(args.compress_out, 'artifact')}")
+    if args.metrics_out:
+        dump_metrics(args.metrics_out, [get_global(), metrics])
+        print(f"wrote {args.metrics_out}")
 
 
 def main() -> None:
@@ -259,6 +275,8 @@ def main() -> None:
     ap.add_argument("--residual-frac", type=float, default=0.15,
                     help="recovery residual adds budget as a fraction of the "
                          "unit's LCC adds")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the run's metrics snapshot as JSON at exit")
     args = ap.parse_args()
 
     if args.arch == "mlp":
@@ -290,6 +308,7 @@ def main() -> None:
     lr_fn = cosine_warmup(args.lr, warmup=10, total=args.steps)
 
     lm = MarkovLM(vocab=cfg.vocab, k=8, seed=0)
+    metrics = MetricsRegistry() if args.metrics_out else None
     ck = Checkpointer(args.checkpoint_dir, keep=3) if args.checkpoint_dir else None
 
     def fresh_state():
@@ -331,6 +350,12 @@ def main() -> None:
                 state, m = step_fn(state, {k: jnp.asarray(v) for k, v in b.items()})
                 if i % 10 == 0 or i == args.steps - 1:
                     tok_s = args.batch * args.seq * max(i - start_step, 1) / (time.time() - t0)
+                    # record where the loop already syncs to print, so
+                    # telemetry adds no extra device round-trips
+                    record_step_metrics(metrics, m, step=i)
+                    if metrics is not None:
+                        metrics.gauge("train_tok_s",
+                                      "training throughput").set(tok_s)
                     prox = (f"  dead {int(m['dead_groups'])}  "
                             f"pen {float(m['prox_penalty']):.2f}"
                             if "dead_groups" in m else "")
@@ -368,6 +393,9 @@ def main() -> None:
             ck.save(args.steps - 1, state, blocking=True)
             print(f"[checkpoint] final save at step {args.steps - 1}")
     print(f"done: {args.steps - start_step} steps in {time.time() - t0:.1f}s")
+    if args.metrics_out:
+        dump_metrics(args.metrics_out, [get_global(), metrics])
+        print(f"wrote {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -171,7 +171,7 @@ def compress_model(params, cfg, compression=None, *, include=None,
                    conv_channel_subsample=None, progress=None,
                    build_packed: bool = True, n_workers: int = 1,
                    budget_adds=None, cache_dir=None, run_dir=None,
-                   resume: bool = False):
+                   resume: bool = False, metrics=None):
     """Steps 2-3 of Algorithm 1 over every compressible unit of any family,
     executed by the :mod:`repro.pipeline` job graph.
 
@@ -187,7 +187,9 @@ def compress_model(params, cfg, compression=None, *, include=None,
     ``budget_adds`` invokes the adds-budget allocator (per-unit plans instead
     of one global config); ``cache_dir`` enables the content-addressed slice
     cache; ``run_dir``/``resume`` make the run restartable after a kill.
-    ``progress`` receives structured ``repro.pipeline.CompressionEvent``s.
+    ``progress`` receives structured ``repro.pipeline.CompressionEvent``s;
+    ``metrics`` (a ``repro.obs.MetricsRegistry``) additionally publishes the
+    event stream and run stats as live counters/gauges.
     """
     import numpy as np
 
@@ -210,7 +212,7 @@ def compress_model(params, cfg, compression=None, *, include=None,
                        budget_adds=budget_adds, cache_dir=cache_dir,
                        run_dir=run_dir, resume=resume,
                        conv_channel_subsample=conv_channel_subsample,
-                       progress=progress)
+                       progress=progress, metrics=metrics)
     packed: dict[str, object] = {}
     params_c = params
     for site in sites:

@@ -1,0 +1,32 @@
+"""Unified telemetry: metrics registry, request tracing, step profiling.
+
+Three pillars, all stdlib-only (no prometheus_client / opentelemetry):
+
+* :mod:`repro.obs.metrics` — a thread-safe :class:`MetricsRegistry` of
+  counters, gauges and bounded-bucket histograms, cheap enough for the
+  serving host loop, exported as Prometheus text or JSON.  The serving
+  engine, scheduler, KV pool, compression pipeline and trainer all publish
+  into it, replacing the ad-hoc stat dicts that used to live on each.
+* :mod:`repro.obs.trace` — per-request :class:`Span` lifecycle
+  (enqueue -> admit -> prefill -> decode marks -> retire) yielding TTFT,
+  time-per-output-token, queue wait and block-growth stalls, dumped as JSONL.
+* :mod:`repro.obs.profile` — :class:`StepProfiler` wall-time ring buffer with
+  periodic ``block_until_ready`` fencing, plus the live roofline that ties an
+  artifact's per-site shift-add budget to the throughput a *running* engine
+  achieves (the same table ``BENCH_serving.json`` tracks offline).
+
+Dependency rule: ``obs`` imports nothing from the rest of ``repro`` (jax only
+lazily, for fencing), so any layer — including ``kernels.dispatch`` — may
+publish into it without cycles.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               dump_metrics, get_global, merged_snapshot,
+                               parse_prometheus, start_metrics_server)
+from repro.obs.profile import StepProfiler, live_roofline, roofline
+from repro.obs.trace import RequestTracer, Span
+
+__all__ = [
+    "MetricsRegistry", "Counter", "Gauge", "Histogram", "parse_prometheus",
+    "get_global", "merged_snapshot", "dump_metrics", "start_metrics_server",
+    "RequestTracer", "Span", "StepProfiler", "roofline", "live_roofline",
+]

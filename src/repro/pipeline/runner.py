@@ -263,6 +263,7 @@ def run_pipeline(
     resume: bool = False,
     conv_channel_subsample: int | None = None,
     progress=None,
+    metrics=None,
 ) -> PipelineResult:
     """Algorithm 1 over ``units`` as a parallel, resumable job graph.
 
@@ -270,10 +271,11 @@ def run_pipeline(
     took); ``plans`` overrides it per unit; ``budget_adds`` invokes the
     allocator to *choose* per-unit plans under a global additions budget.
     ``n_workers <= 1`` executes in-process — the serial baseline the parallel
-    path is bitwise-checked against.
+    path is bitwise-checked against.  ``metrics=`` publishes the event stream
+    and the final run stats into an ``repro.obs`` registry.
     """
     t_start = time.time()
-    emitter = EventEmitter(progress)
+    emitter = EventEmitter(progress, metrics=metrics)
     base = compression if compression is not None else CompressionConfig()
     cache = SliceCache(cache_dir)
     if run_dir is not None and cache_dir is None:
@@ -382,5 +384,11 @@ def run_pipeline(
     if h0 or m0:  # allocator search traffic, reported separately
         stats["search_cache_hits"] = h0
         stats["search_cache_misses"] = m0
+    if metrics is not None:
+        g = metrics.gauge("pipeline_run", "final pipeline run stats",
+                          labels=("stat",))
+        for k, v in stats.items():
+            if isinstance(v, (int, float)) and v is not None:
+                g.set(v, stat=k)
     return PipelineResult(records=records, report=report, unit_configs=plans,
                           stats=stats, budget_info=budget_info)

@@ -37,7 +37,8 @@ the same pipeline.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import time
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -48,9 +49,10 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.kernels import dispatch
 from repro.models import api
+from repro.obs import MetricsRegistry, RequestTracer, StepProfiler
 from repro.serving.executor import (CompressedExecutor, LCCMatvec,
                                     matvecs_from_artifact)
-from repro.serving.kvpool import KVPool
+from repro.serving.kvpool import KVPool, empty_stats
 
 __all__ = ["ServingEngine", "GenerationResult", "StepEvent", "LCCMatvec",
            "CompressedExecutor", "compress_ffn_for_serving"]
@@ -62,6 +64,10 @@ class GenerationResult:
     prompt_len: int
     finished: bool
     error: str | None = None
+    # per-request telemetry the engine learned while serving this request
+    # (prefill_s, cached_tokens, blocks_grown, cancelled, exhausted, ...);
+    # the scheduler folds it into the request's span at retire
+    stats: dict = field(default_factory=dict)
 
 
 @dataclass(frozen=True)
@@ -87,7 +93,8 @@ class ServingEngine:
                  use_kernel: bool = True, bulk_prefill: bool = True,
                  interpret: bool | None = None, mesh=None,
                  kv_block: int | None = 16, kv_blocks: int | None = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True, metrics=None, tracer=None,
+                 fence_every: int = 32):
         if artifact is not None:
             if cfg is None:
                 cfg = artifact.config
@@ -155,7 +162,64 @@ class ServingEngine:
         self._decode = jax.jit(
             lambda p, s, t, pos: api.decode(p, cfg, s, t, pos, executor=ex))
         self.step_dispatches = 0  # jitted fused-step invocations (observability)
-        self._decode_trace_launches = None  # pallas_calls in one decode step
+        # pallas_calls per traced decode step, keyed by input bucket
+        # ("BxT"): retraces record under their own key and a warm retrace
+        # can only raise a key's value (max), never clobber the cold count
+        self._trace_launches: dict[str, int] = {}
+        # telemetry: metrics=None -> fresh per-engine registry; metrics=False
+        # -> fully off (the A/B baseline for overhead measurement); any
+        # MetricsRegistry -> shared.  tracer=True builds a RequestTracer
+        # publishing into the same registry; the scheduler reads engine.tracer.
+        if metrics is False:
+            self.metrics = None
+        else:
+            self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.profiler = (StepProfiler(fence_every=fence_every)
+                         if self.metrics is not None else None)
+        if tracer is True:
+            self.tracer: RequestTracer | None = RequestTracer(
+                metrics=self.metrics)
+        else:
+            self.tracer = tracer or None
+        m = self.metrics
+        if m is not None:
+            # pre-resolved metric objects: the per-step hot path never walks
+            # the registry's name table
+            self._m_steps = m.counter(
+                "serving_decode_steps_total", "fused decode step dispatches")
+            self._m_tokens = m.counter(
+                "serving_tokens_total", "decode tokens sampled")
+            self._m_step_hist = m.histogram(
+                "serving_decode_step_seconds",
+                "fused decode step wall (host-synced)")
+            self._m_prefills = m.counter(
+                "serving_prefills_total", "prompt admissions by prefill kind",
+                labels=("kind",))
+            self._m_prefill_hist = m.histogram(
+                "serving_prefill_seconds", "submit() prefill wall")
+            self._m_launches = m.gauge(
+                "serving_pallas_launches_per_step",
+                "Pallas launches in one traced decode step",
+                labels=("bucket",))
+            self._m_grown = m.counter(
+                "serving_blocks_grown_total",
+                "KV blocks allocated mid-decode")
+            self._m_exhausted = m.counter(
+                "serving_pool_exhausted_total",
+                "requests errored by KV pool exhaustion")
+            self._m_pool = m.gauge(
+                "serving_kv_pool", "KV block pool stats", labels=("stat",))
+            m.gauge("serving_slots", "decode slots").set(n_slots)
+            # the executor builds layer plans lazily at first trace, so this
+            # gauge is refreshed alongside the launch counter at trace time
+            self._m_plans = m.gauge(
+                "serving_layer_plans", "distinct layer plans in the executor")
+            self._m_plans.set(self.n_layer_plans)
+        else:
+            self._m_steps = self._m_tokens = self._m_step_hist = None
+            self._m_prefills = self._m_prefill_hist = self._m_launches = None
+            self._m_grown = self._m_exhausted = self._m_pool = None
+            self._m_plans = None
         self._step_fn = self._build_step_fn()
 
     @staticmethod
@@ -189,13 +253,19 @@ class ServingEngine:
             dpos = jnp.where(emit, pos - 1, -1).astype(jnp.int32)
             # launch accounting: this body runs at trace time, so the counter
             # delta around api.decode is exactly the pallas_calls one decode
-            # step emits; keep the first (cold) trace — later retraces may
-            # undercount through warm inner-jit caches
+            # step emits.  Record per input bucket and keep each bucket's max:
+            # a warm retrace can undercount through inner-jit caches but a
+            # real bucket change gets its own honest cold count
             t0 = dispatch.launch_count()
             logits, new_state = api.decode(params, cfg, state, toks, dpos,
                                            executor=ex)
-            if self._decode_trace_launches is None:
-                self._decode_trace_launches = dispatch.launch_count() - t0
+            bucket = f"{toks.shape[0]}x{toks.shape[1]}"
+            n_launch = max(dispatch.launch_count() - t0,
+                           self._trace_launches.get(bucket, 0))
+            self._trace_launches[bucket] = n_launch
+            if self._m_launches is not None:
+                self._m_launches.set(n_launch, bucket=bucket)
+                self._m_plans.set(self.n_layer_plans)
             sub = jax.vmap(jax.random.fold_in)(keys, new_count)
             nxt = api.sample_tokens(logits.astype(jnp.float32), sub, temps)
             nxt = jnp.where(emit, nxt, last_tok)
@@ -233,9 +303,15 @@ class ServingEngine:
 
     @property
     def pallas_launches_per_step(self) -> int:
-        """Measured Pallas launches in one fused decode step (0 before the
-        first step traces; excludes prefill, which runs dense)."""
-        return self._decode_trace_launches or 0
+        """Measured Pallas launches in one fused decode step — the max over
+        every traced input bucket (0 before the first step traces; excludes
+        prefill, which runs dense)."""
+        return max(self._trace_launches.values(), default=0)
+
+    @property
+    def pallas_launches_by_bucket(self) -> dict:
+        """Per-trace launch counts keyed by decode input bucket ("BxT")."""
+        return dict(self._trace_launches)
 
     @property
     def n_layer_plans(self) -> int:
@@ -269,8 +345,15 @@ class ServingEngine:
         return self.pool is None or self.pool.can_admit(prompt)
 
     def pool_stats(self) -> dict:
-        """Paged-pool telemetry (empty dict for contiguous engines)."""
-        return {} if self.pool is None else self.pool.stats()
+        """KV-pool telemetry.  Always the full key set — contiguous engines
+        report every key zeroed (``n_blocks == 0`` distinguishes them) so
+        callers never branch on engine kind.  Mirrored into the registry's
+        ``serving_kv_pool{stat=...}`` gauge when metrics are enabled."""
+        s = empty_stats() if self.pool is None else self.pool.stats()
+        if self._m_pool is not None:
+            for k, v in s.items():
+                self._m_pool.set(v, stat=k)
+        return s
 
     def submit(self, prompt: list[int], *, max_new: int | None = None,
                temperature: float | None = None) -> int:
@@ -288,6 +371,11 @@ class ServingEngine:
         slot = int(free[0])
         rid = self._next_req
         self._next_req += 1
+        t_pre = time.perf_counter()
+        cached_tokens = 0
+        kind = "paged" if self.paged else (
+            "bulk" if self.bulk_prefill
+            and ("k" in self.state or "c_kv" in self.state) else "tokenwise")
         if self.paged:
             plan = self.pool.admit(slot, prompt)
             if plan is None:
@@ -298,7 +386,8 @@ class ServingEngine:
                     "until a request finishes")
             self._prefill_slot_paged(slot, prompt, plan)
             self.pool.register_prefix(slot, prompt)
-        elif self.bulk_prefill and ("k" in self.state or "c_kv" in self.state):
+            cached_tokens = plan.cached_tokens
+        elif kind == "bulk":
             # one bulk forward writes the whole slot cache (and rewrites the
             # full kpos row, so stale entries need no separate reset)
             self._prefill_slot(slot, prompt)
@@ -322,8 +411,17 @@ class ServingEngine:
         self._ctrl_dev = None  # budget/temp/key arrays changed: re-upload once
         self._slot_dev = None  # host mirrors mutated: re-upload once
         self.slot_req[slot] = rid
-        self.results[rid] = GenerationResult(tokens=list(prompt),
-                                             prompt_len=len(prompt), finished=False)
+        # host wall of the whole admission (dispatch + bookkeeping; the
+        # device work may still be in flight — bench paths that want the
+        # synced latency block on eng.state themselves)
+        prefill_s = time.perf_counter() - t_pre
+        if self._m_prefills is not None:
+            self._m_prefills.inc(1, kind=kind)
+            self._m_prefill_hist.observe(prefill_s)
+        self.results[rid] = GenerationResult(
+            tokens=list(prompt), prompt_len=len(prompt), finished=False,
+            stats={"prefill_s": prefill_s, "prefill_kind": kind,
+                   "cached_tokens": cached_tokens})
         return rid
 
     # -------------------------------------------------------------- prefill
@@ -504,6 +602,7 @@ class ServingEngine:
                 if self.paged:
                     self._release_slot(slot)
                 self.results[rid].finished = True
+                self.results[rid].stats["cancelled"] = True
                 return True
         return False
 
@@ -528,12 +627,20 @@ class ServingEngine:
             self._slot_dev = (
                 jnp.asarray(self._last_tok), jnp.asarray(self.pos, jnp.int32),
                 jnp.asarray(self.active), jnp.asarray(self._new_count))
+        t0 = self.profiler.begin() if self.profiler is not None else 0.0
         new_state, packed, self._slot_dev = self._step_fn(
             self.params, self.state, *self._slot_dev,
             max_new_d, temps_d, keys_d, eos)
         self.step_dispatches += 1
         self.state = new_state
         nxt, emit, done = np.asarray(packed)  # the one small host transfer
+        if self.profiler is not None:
+            # np.asarray above already synced the step, so no fence needed
+            n_emit = int(emit.sum())
+            dt = self.profiler.end(t0, tokens=n_emit)
+            self._m_steps.inc()
+            self._m_tokens.inc(n_emit)
+            self._m_step_hist.observe(dt)
         for slot in np.where(self.active)[0]:
             rid = self.slot_req[slot]
             r = self.results[rid]
@@ -573,12 +680,19 @@ class ServingEngine:
                 r.finished = True
                 r.error = ("KV block pool exhausted mid-decode "
                            f"({self.pool.in_use_blocks} blocks in use)")
+                r.stats["exhausted"] = True
+                if self._m_exhausted is not None:
+                    self._m_exhausted.inc()
                 self.active[slot] = False
                 self._slot_dev = None
                 self._release_slot(slot)
                 events.append(StepEvent(rid=rid, token=None, finished=True))
                 continue
             self._tbl_host[slot, bi] = bid
+            r = self.results[self.slot_req[slot]]
+            r.stats["blocks_grown"] = r.stats.get("blocks_grown", 0) + 1
+            if self._m_grown is not None:
+                self._m_grown.inc()
             dirty = True
         if dirty:
             self.state = {**self.state,

@@ -40,7 +40,19 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-__all__ = ["KVPool", "AdmitPlan"]
+__all__ = ["KVPool", "AdmitPlan", "POOL_STAT_KEYS", "empty_stats"]
+
+# the full stats() key set — contiguous (pool-less) engines report the same
+# keys zeroed, so dashboards and CI assertions never branch on engine kind
+POOL_STAT_KEYS = ("n_blocks", "block_size", "free_blocks", "cached_blocks",
+                  "in_use_blocks", "peak_in_use_blocks", "prefix_queries",
+                  "prefix_hit_blocks", "prefix_hit_tokens", "prefix_hit_rate",
+                  "cow_copies", "evictions")
+
+
+def empty_stats() -> dict:
+    """Zeroed :meth:`KVPool.stats` shape for engines without a block pool."""
+    return {k: 0.0 if k == "prefix_hit_rate" else 0 for k in POOL_STAT_KEYS}
 
 
 @dataclass

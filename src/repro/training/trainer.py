@@ -26,7 +26,29 @@ from repro.distributed.compress_grads import compressed_psum
 from repro.models import api
 from repro.optim.optimizers import Optimizer, clip_by_global_norm
 
-__all__ = ["TrainState", "init_train_state", "make_train_step"]
+__all__ = ["TrainState", "init_train_state", "make_train_step",
+           "record_step_metrics"]
+
+
+def record_step_metrics(registry, metrics: dict, *, step=None) -> None:
+    """Publish one train step's metric dict (``loss``, ``grad_norm``, and —
+    under ProxSGD — ``dead_groups`` / ``prox_penalty``) into an
+    ``repro.obs`` registry as ``train_<name>`` gauges plus the
+    ``train_steps_total`` counter.  Values may still be device arrays; the
+    caller decides when to sync (call this where the loop already prints, so
+    telemetry never forces an extra device round-trip)."""
+    if registry is None:
+        return
+    registry.counter("train_steps_total", "recorded train steps").inc()
+    if step is not None:
+        registry.gauge("train_step", "last recorded optimizer step").set(
+            int(step))
+    for k, v in metrics.items():
+        try:
+            fv = float(v)
+        except (TypeError, ValueError):
+            continue  # non-scalar extras stay out of the registry
+        registry.gauge(f"train_{k}", f"train step metric {k!r}").set(fv)
 
 
 @jax.tree_util.register_dataclass
