@@ -86,7 +86,10 @@ def bench_engine(make_engine, *, n_slots: int, prompt_len: int,
             # measured at the first decode trace: with layer plans active
             # these two are equal (one launch covers a whole layer stack)
             "pallas_launches": eng.pallas_launches_per_step,
-            "n_layer_plans": eng.n_layer_plans}
+            "n_layer_plans": eng.n_layer_plans,
+            # why any plan fell back to the per-region route (empty = none)
+            "plan_fallbacks": (eng.plan_stats()["fallbacks"]
+                               if hasattr(eng, "plan_stats") else {})}
 
 
 def bench_poisson(make_engine, *, n_slots: int, n_requests: int,
@@ -210,7 +213,7 @@ def bench_prefix(make_engine, *, prompt_len: int) -> dict | None:
 
 
 def bench_obs_overhead(make_engine, *, n_slots: int, prompt_len: int,
-                       steps: int, attempts: int = 3) -> dict:
+                       steps: int, attempts: int = 5) -> dict:
     """Decode step wall with full telemetry (metrics + tracer + profiler) vs
     everything disabled (``metrics=False``), scheduler-driven so the tracer's
     token hooks are on the measured path.
@@ -409,6 +412,16 @@ def main() -> None:
                 roofline_section(artifact_all, "compressed+attn", cfg.name),
                 roofline_section(artifact_moe, "compressed", cfg_moe.name)]
 
+    # Segment-packed gather layout: per-stage run-length percentiles before
+    # vs after the pack-time repack (recorded when each plan is built)
+    segment_layout = {}
+    for art, arch in ((artifact, cfg.name), (artifact_all, cfg.name + "+attn"),
+                      (artifact_moe, cfg_moe.name)):
+        seg = (getattr(art, "pipeline_stats", None) or {}).get(
+            "segment_layout", {})
+        for stage, st in seg.items():
+            segment_layout[f"{arch}.{stage}"] = st
+
     report = {
         "bench": "serving",
         "arch": cfg.name,
@@ -429,7 +442,32 @@ def main() -> None:
         "poisson": poisson,
         "prefix_cache": prefix,
         "obs_overhead": obs_overhead,
+        "segment_layout": segment_layout,
     }
+
+    # cross-PR history: append a dated summary entry, carrying forward any
+    # entries already recorded in the previous report at the same path
+    history = []
+    try:
+        with open(args.out) as f:
+            history = json.load(f).get("history", [])
+    except (OSError, ValueError):
+        pass
+
+    def _tok(mode, arch, n):
+        r = next((r for r in results if r["mode"] == mode and r["arch"] == arch
+                  and r["n_slots"] == n), None)
+        return r["decode_tok_s"] if r else None
+
+    history.append({
+        "date": time.strftime("%Y-%m-%d"),
+        "smoke": args.smoke,
+        "dense_tok_s_n8": _tok("dense", cfg.name, 8),
+        "compressed_tok_s_n8": _tok("compressed", cfg.name, 8),
+        "moe_dense_tok_s_n8": _tok("dense", cfg_moe.name, 8),
+        "moe_compressed_tok_s_n8": _tok("compressed", cfg_moe.name, 8),
+    })
+    report["history"] = history
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")

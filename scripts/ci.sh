@@ -46,6 +46,23 @@ base = next(x["decode_tok_s"] for x in tracked["results"]
 assert smoke >= 0.8 * base, (
     f"compressed decode regressed: smoke {smoke} tok/s < 0.8x tracked {base}")
 assert r["roofline"] and all(s["sites"] for s in r["roofline"])
+# whole-step MoE plan: the mixtral compressed row must decode in exactly one
+# Pallas launch covering its one layer plan (attention + router + experts)
+moe = next(x for x in r["results"]
+           if x["arch"] == "mixtral-8x22b" and x["mode"] == "compressed"
+           and x["n_slots"] == 8)
+assert moe["pallas_launches"] == moe["n_layer_plans"] > 0, moe
+assert not moe["plan_fallbacks"], moe["plan_fallbacks"]
+# compressed-vs-dense gate on the tracked full bench: the segment-packed
+# one-launch plan must keep olmo-1b compressed within 0.95x of dense at n8
+t_dense = next(x["decode_tok_s"] for x in tracked["results"]
+               if x["arch"] == "olmo-1b" and x["mode"] == "dense"
+               and x["n_slots"] == 8)
+assert base >= 0.95 * t_dense, (
+    f"tracked compressed {base} tok/s < 0.95x tracked dense {t_dense}")
+# cross-PR history must be tracked in the committed bench report
+assert tracked["history"] and all("date" in h for h in tracked["history"])
+assert tracked.get("segment_layout"), "segment_layout section missing"
 # telemetry's cost is a fixed ~tens-of-us per step, so judge it against the
 # tracked full-bench engine's step wall (the smoke engine's sub-ms steps
 # would overstate the fraction by the model-size ratio)

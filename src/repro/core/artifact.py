@@ -254,8 +254,10 @@ class CompressedModel:
         # 1 and pre-plan artifacts load unchanged.
         plans_tree: dict[str, Any] = {}
         man_plans: dict[str, Any] = {}
+        # "segs" (segment-packed layout) is optional: PR 8-era artifacts
+        # without it load with segs=None and take the operand kernel path
         _STAGE_ARRAYS = ("prep_src", "prep_tgt", "gidx", "gexp", "gsgn",
-                         "outg", "fs_mat", "dw_mat", "bias")
+                         "outg", "fs_mat", "dw_mat", "bias", "segs")
         for pkey, stages in self.plans.items():
             plans_tree[pkey] = {}
             man_plans[pkey] = {}
@@ -376,7 +378,8 @@ class CompressedModel:
                 arrs = tree.get("plans", {}).get(pkey, {}).get(sname, {})
                 kw = {f: (np.asarray(arrs[f]) if f in sm["present"] else None)
                       for f in ("prep_src", "prep_tgt", "gidx", "gexp",
-                                "gsgn", "outg", "fs_mat", "dw_mat", "bias")}
+                                "gsgn", "outg", "fs_mat", "dw_mat", "bias",
+                                "segs")}
                 stages[sname] = PackedStage(
                     k_alloc=int(sm["k_alloc"]), d_src=int(sm["d_src"]),
                     out_dim=int(sm["out_dim"]), n_layers=int(sm["n_layers"]),

@@ -127,10 +127,13 @@ def roofline(artifact, decode_tok_s, *, pallas_launches=None,
                        else None)}
                   for l in rep.layers],
     }
-    waste = (getattr(artifact, "pipeline_stats", None) or {}).get(
-        "padding_waste")
+    stats = getattr(artifact, "pipeline_stats", None) or {}
+    waste = stats.get("padding_waste")
     if waste:
         sec["padding_waste"] = waste
+    seg = stats.get("segment_layout")
+    if seg:
+        sec["segment_layout"] = seg
     return sec
 
 

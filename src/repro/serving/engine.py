@@ -215,23 +215,28 @@ class ServingEngine:
             self._m_plans = m.gauge(
                 "serving_layer_plans", "distinct layer plans in the executor")
             self._m_plans.set(self.n_layer_plans)
+            self._m_plan_fallbacks = m.counter(
+                "serving_plan_fallbacks_total",
+                "layer-plan builds that fell back to the per-region route",
+                labels=("reason",))
         else:
             self._m_steps = self._m_tokens = self._m_step_hist = None
             self._m_prefills = self._m_prefill_hist = self._m_launches = None
             self._m_grown = self._m_exhausted = self._m_pool = None
-            self._m_plans = None
+            self._m_plans = self._m_plan_fallbacks = None
+        self._fb_seen: set[str] = set()  # plan keys already counted
         self._step_fn = self._build_step_fn()
 
     @staticmethod
     def _build_executor(artifact, interpret, mesh=None):
         """Site-keyed :class:`CompressedExecutor` over the artifact — family
         agnostic (None when the artifact has no routable sites).  Layer plans
-        stay off under a mesh: the plan kernels carry no sharding
-        annotations, so distributed serving keeps the per-region route."""
+        stay on under a mesh: the plan call wraps itself in ``shard_map``
+        (slot-split activations, replicated stage constants), so distributed
+        serving keeps the one-launch-per-plan step too."""
         if artifact is None:
             return None
-        ex = CompressedExecutor(artifact, interpret=interpret,
-                                use_plans=mesh is None)
+        ex = CompressedExecutor(artifact, interpret=interpret, mesh=mesh)
         return ex if ex.sites else None
 
     # ---------------------------------------------------------- fused step
@@ -266,6 +271,7 @@ class ServingEngine:
             if self._m_launches is not None:
                 self._m_launches.set(n_launch, bucket=bucket)
                 self._m_plans.set(self.n_layer_plans)
+            self._sync_plan_fallbacks()
             sub = jax.vmap(jax.random.fold_in)(keys, new_count)
             nxt = api.sample_tokens(logits.astype(jnp.float32), sub, temps)
             nxt = jnp.where(emit, nxt, last_tok)
@@ -343,6 +349,29 @@ class ServingEngine:
         if self.active.all():
             return False
         return self.pool is None or self.pool.can_admit(prompt)
+
+    def _sync_plan_fallbacks(self) -> None:
+        """Publish newly-recorded plan fallbacks (executor builds plans lazily
+        at trace time, so this runs alongside the launch accounting)."""
+        ex = self.executor
+        if ex is None:
+            return
+        for key, reason in getattr(ex, "plan_fallbacks", {}).items():
+            if key not in self._fb_seen:
+                self._fb_seen.add(key)
+                if self._m_plan_fallbacks is not None:
+                    self._m_plan_fallbacks.inc(1, reason=reason)
+
+    def plan_stats(self) -> dict:
+        """Layer-plan telemetry: plans built, measured launches per step, and
+        every plan key that fell back to the per-region route with its reason
+        string (``pool_stats()``-style — always the full key set)."""
+        self._sync_plan_fallbacks()
+        fallbacks = (dict(getattr(self.executor, "plan_fallbacks", {}))
+                     if self.executor is not None else {})
+        return {"n_layer_plans": self.n_layer_plans,
+                "pallas_launches_per_step": self.pallas_launches_per_step,
+                "fallbacks": fallbacks}
 
     def pool_stats(self) -> dict:
         """KV-pool telemetry.  Always the full key set — contiguous engines

@@ -247,3 +247,54 @@ def test_elastic_remesh_reshard_subprocess():
         print("OK", plan_big.shape, plan_small.shape)
     """)
     assert "OK" in out
+
+
+def test_mesh_sharded_layer_plan_subprocess():
+    """Compressed artifact under a 2-device mesh decodes through the
+    whole-step layer plan (one launch per plan, shard_map-wrapped), with
+    tokens identical and logits within 1e-4 of the single-device engine."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import compat, core
+        from repro.configs import get_arch, reduced_config
+        from repro.models import api
+        from repro.serving.engine import ServingEngine
+        assert jax.device_count() == 2
+        cfg = reduced_config(get_arch("olmo-1b"), d_model=32, n_heads=2,
+                             n_kv_heads=2, head_dim=16, d_ff=48, vocab=64,
+                             n_layers=2)
+        params = api.init_params(jax.random.PRNGKey(0), cfg)
+        comp = core.CompressionConfig(algorithm="fp", weight_sharing=True,
+                                      max_share_rel_err=0.06)
+        art = api.compress_model(params, cfg, comp)
+        prompts = [[5, 9, 2], [7, 1], [4, 4, 4, 8], [30]]
+        ref = ServingEngine(artifact=art, n_slots=4, max_len=32)
+        r_ref = ref.generate(prompts, max_new_tokens=6)
+        st_ref = ref.plan_stats()
+        assert st_ref["n_layer_plans"] == 1, st_ref
+
+        tok = jnp.asarray([[3], [1], [2], [7]], jnp.int32)
+        pos = jnp.asarray([2, 1, 3, 0], jnp.int32)
+        st0 = api.init_decode_state(cfg, 4, 32, kv_block=16)
+        l_ref, _ = ref._decode(ref.params, st0, tok, pos)
+
+        for axes in (("data", "model"), ("model", "data")):
+            mesh = compat.make_mesh((2, 1), axes)
+            eng = ServingEngine(artifact=art, n_slots=4, max_len=32,
+                                mesh=mesh)
+            r = eng.generate(prompts, max_new_tokens=6)
+            st = eng.plan_stats()
+            assert st["n_layer_plans"] == 1, (axes, st)
+            assert st["pallas_launches_per_step"] == 1, (axes, st)
+            assert st["fallbacks"] == {}, (axes, st)
+            assert [x.tokens for x in r] == [x.tokens for x in r_ref], axes
+            stt = jax.device_put(st0, eng._state_sh)
+            l_sh, _ = eng._decode(eng.params, stt, tok, pos)
+            d = float(jnp.abs(l_ref.astype(jnp.float32)
+                              - l_sh.astype(jnp.float32)).max())
+            assert d <= 1e-4, (axes, d)
+            print("mesh", axes[0], "plans", st["n_layer_plans"],
+                  "launches", st["pallas_launches_per_step"], "max_diff", d)
+        print("OK")
+    """, devices=2)
+    assert "OK" in out

@@ -41,7 +41,9 @@ def _decode_parity(art, *, batch: int = 1, smax: int = 8):
 
 def test_moe_executor_parity_and_grouped_dispatch(monkeypatch):
     """All experts of an MoE layer apply their chains through the grouped
-    (one-dispatch) launch; compressed logits match dense-effective <= 1e-4."""
+    (one-dispatch) launch; compressed logits match dense-effective <= 1e-4.
+    Plans are disabled here so the per-region grouped route stays covered
+    (with plans on, the whole-step MoE plan absorbs the expert dispatches)."""
     from repro.kernels import ops
 
     calls = {"group": 0}
@@ -59,10 +61,18 @@ def test_moe_executor_parity_and_grouped_dispatch(monkeypatch):
         moe=MoESpec(n_experts=2, top_k=1, d_ff_expert=16, capacity_factor=8.0))
     params = api.init_params(jax.random.PRNGKey(1), cfg)
     art = api.compress_model(params, cfg, _fp())
-    ex, err = _decode_parity(art, batch=2)
-    assert err <= 1e-4, err
+    cfg = art.config
+    ex = CompressedExecutor(art, interpret=None, use_plans=False)
+    state = api.init_decode_state(cfg, 2, 8)
+    tok = jnp.asarray([[3]] * 2, jnp.int32)
+    pos = jnp.asarray([0] * 2, jnp.int32)
+    l_k, _ = jax.jit(lambda p: api.decode(p, cfg, state, tok, pos,
+                                          executor=ex))(art.params)
+    l_d, _ = jax.jit(lambda p: api.decode(p, cfg, state, tok, pos))(art.params)
+    assert float(jnp.abs(l_k - l_d).max()) <= 1e-4
     assert ex.routed == ex.sites, ex.sites - ex.routed
     assert calls["group"] > 0, "MoE experts never hit the grouped launch"
+    assert ex.plan_fallbacks.get("step") == "plans_disabled"
 
 
 def test_rwkv6_executor_parity():
@@ -338,14 +348,18 @@ def test_step_plan_bakes_uncovered_sites_dense():
 
 
 def test_moe_plan_executor_parity():
-    """MoE layer plan (all experts' gate+up, SwiGLU, down in one launch) ==
-    per-region grouped kernels == dense-effective decode."""
+    """Whole-step MoE plan (attention + router top-k + both expert
+    super-stages in ONE launch) == per-region grouped kernels ==
+    dense-effective decode, including a second decode step."""
+    from repro.kernels import dispatch
+
     cfg = reduced_config(
         get_arch("mixtral-8x22b"), d_model=32, n_heads=2, n_kv_heads=2,
-        head_dim=16, vocab=64, n_layers=1,
+        head_dim=16, vocab=64, n_layers=2,
         moe=MoESpec(n_experts=2, top_k=1, d_ff_expert=16, capacity_factor=8.0))
     params = api.init_params(jax.random.PRNGKey(0), cfg)
     art = api.compress_model(params, cfg, _fp())
+    cfg = art.config
     state = api.init_decode_state(cfg, 2, 8)
     tok = jnp.asarray([[3]] * 2, jnp.int32)
     pos = jnp.asarray([0] * 2, jnp.int32)
@@ -353,13 +367,27 @@ def test_moe_plan_executor_parity():
     ex_reg = CompressedExecutor(art, interpret=None, use_plans=False)
     run = lambda ex: jax.jit(
         lambda p: api.decode(p, cfg, state, tok, pos, executor=ex))(art.params)
-    l_plan, _ = run(ex_plan)
+    dispatch.reset_launch_count()
+    t0 = dispatch.launch_count()
+    l_plan, s_plan = run(ex_plan)
+    n_launch = dispatch.launch_count() - t0
     l_reg, _ = run(ex_reg)
-    l_d, _ = jax.jit(lambda p: api.decode(p, cfg, state, tok, pos))(art.params)
+    l_d, s_d = jax.jit(lambda p: api.decode(p, cfg, state, tok,
+                                            pos))(art.params)
     assert float(jnp.abs(l_plan - l_d).max()) <= 1e-4
     assert float(jnp.abs(l_plan - l_reg).max()) <= 1e-4
-    assert ex_plan.n_layer_plans == cfg.n_layers  # one MoE plan per layer
+    # the routed block folds into the step plan: launches == plans == 1
+    assert ex_plan.n_layer_plans == 1
+    assert n_launch == 1, n_launch
+    assert ex_plan.plan_fallbacks == {}
     assert ex_plan.routed == ex_plan.sites
+    # second decode step from the plan-updated state keeps tracking dense
+    tok2 = jnp.asarray([[5]] * 2, jnp.int32)
+    pos2 = jnp.asarray([1] * 2, jnp.int32)
+    l2p, _ = jax.jit(lambda p: api.decode(p, cfg, s_plan, tok2, pos2,
+                                          executor=ex_plan))(art.params)
+    l2d, _ = jax.jit(lambda p: api.decode(p, cfg, s_d, tok2, pos2))(art.params)
+    assert float(jnp.abs(l2p - l2d).max()) <= 1e-4
 
 
 def test_engine_step_plan_single_launch():
@@ -439,7 +467,7 @@ def test_artifact_plans_roundtrip(tmp_path):
         ps2 = art2.plans["step"][name]
         assert ps2.k_alloc == ps.k_alloc and ps2.out_dim == ps.out_dim
         for f in ("prep_src", "prep_tgt", "gidx", "gexp", "gsgn", "outg",
-                  "fs_mat", "dw_mat", "bias"):
+                  "fs_mat", "dw_mat", "bias", "segs"):
             a, b = getattr(ps, f), getattr(ps2, f)
             assert (a is None) == (b is None), (name, f)
             if a is not None:
@@ -456,3 +484,103 @@ def test_artifact_plans_roundtrip(tmp_path):
     assert ex2.n_layer_plans == 1
     np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
                                rtol=1e-6, atol=1e-6)
+
+
+def test_pr8_plan_artifacts_without_segs_load_and_decode_bitwise(tmp_path):
+    """PR 8-era saved plans carry no segment-packed layout: stripping ``segs``
+    before save must load back with ``segs is None`` and decode through the
+    original full-gather operand path bitwise-identically to the in-memory
+    stripped plan."""
+    import dataclasses
+
+    cfg = reduced_config(get_arch("olmo-1b"), d_model=32, n_heads=2,
+                         n_kv_heads=2, head_dim=16, d_ff=48, vocab=64,
+                         n_layers=2)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    art = api.compress_model(params, cfg, _fp())
+    ex = CompressedExecutor(art, interpret=None)
+    assert ex.step_plan(cfg) is not None
+    # simulate a PR 8 artifact: drop the segment descriptors before saving
+    art.plans["step"] = {n: dataclasses.replace(ps, segs=None, seg_stats=None,
+                                                waste=None)
+                         for n, ps in art.plans["step"].items()}
+    d = str(tmp_path / "pr8_art")
+    art.save(d)
+    art2 = CompressedModel.load(d)
+    assert all(ps.segs is None for ps in art2.plans["step"].values())
+
+    state = api.init_decode_state(cfg, 2, 8)
+    tok = jnp.asarray([[3]] * 2, jnp.int32)
+    pos = jnp.asarray([0] * 2, jnp.int32)
+    ex_mem = CompressedExecutor(art, interpret=None)  # reuses stripped stages
+    ex_load = CompressedExecutor(art2, interpret=None)
+    l_mem, _ = jax.jit(lambda p: api.decode(p, cfg, state, tok, pos,
+                                            executor=ex_mem))(art.params)
+    l_load, _ = jax.jit(lambda p: api.decode(p, cfg, state, tok, pos,
+                                             executor=ex_load))(art2.params)
+    assert ex_load.n_layer_plans == 1  # legacy layout still plans
+    np.testing.assert_array_equal(np.asarray(l_mem), np.asarray(l_load))
+    # and the operand path still tracks dense within tolerance
+    l_d, _ = jax.jit(lambda p: api.decode(p, cfg, state, tok, pos))(art.params)
+    assert float(jnp.abs(l_load - l_d).max()) <= 1e-4
+
+
+def test_plan_fallback_reasons_and_segment_stats():
+    """Ineligible families record a reason string in ``plan_fallbacks``;
+    eligible plans record per-stage padding waste and segment-layout
+    run-length stats into the artifact's pipeline_stats."""
+    # hybrid family: step plan must fall back with a reason, not silently
+    cfg_hyb = reduced_config(get_arch("zamba2-7b"), d_model=64, n_heads=4,
+                             n_kv_heads=4, head_dim=16, d_ff=96, vocab=64,
+                             ssm=SSMSpec(d_inner=64, d_state=16, head_dim=16,
+                                         d_conv=4))
+    params = api.init_params(jax.random.PRNGKey(0), cfg_hyb)
+    art = api.compress_model(params, cfg_hyb, _fp())
+    ex = CompressedExecutor(art, interpret=None)
+    assert ex.step_plan(cfg_hyb) is None
+    assert ex.plan_fallbacks.get("step") == "family:hybrid"
+
+    # eligible dense family: stages carry segs + stats, recorded in the art
+    cfg = reduced_config(get_arch("olmo-1b"), d_model=32, n_heads=2,
+                         n_kv_heads=2, head_dim=16, d_ff=48, vocab=64,
+                         n_layers=2)
+    params = api.init_params(jax.random.PRNGKey(1), cfg)
+    art = api.compress_model(params, cfg, _fp())
+    ex = CompressedExecutor(art, interpret=None)
+    plan = ex.step_plan(cfg)
+    assert plan is not None and ex.plan_fallbacks == {}
+    segged = [ps for ps in plan.stages.values() if ps.segs is not None]
+    assert segged, "new plans must carry segment descriptors"
+    seg = art.pipeline_stats.get("segment_layout", {})
+    pw = art.pipeline_stats.get("padding_waste", {})
+    assert any(k.startswith("plan.") for k in seg), seg
+    assert any(k.startswith("plan.") for k in pw), pw
+    for st in seg.values():
+        assert st["p50_run_after"] >= st["p50_run_before"] or \
+            st["n_runs_after"] <= st["n_runs_before"]
+        assert 0.0 <= st["gather_frac"] <= 1.0
+    for wv in (v for k, v in pw.items() if k.startswith("plan.")):
+        assert 0.0 <= wv["row_waste"] <= 1.0
+        assert 0.0 <= wv["slice_waste"] <= 1.0
+
+
+def test_engine_plan_stats_and_fallback_metric():
+    """Engine telemetry: ``plan_stats()`` reports plans/launches/fallback
+    reasons and ``serving_plan_fallbacks_total{reason}`` counts each plan
+    key once."""
+    from repro.serving.engine import ServingEngine
+
+    cfg = reduced_config(get_arch("zamba2-7b"), d_model=64, n_heads=4,
+                         n_kv_heads=4, head_dim=16, d_ff=96, vocab=64,
+                         ssm=SSMSpec(d_inner=64, d_state=16, head_dim=16,
+                                     d_conv=4))
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    art = api.compress_model(params, cfg, _fp())
+    eng = ServingEngine(artifact=art, n_slots=2, max_len=16)
+    eng.generate([[5, 9]], max_new_tokens=4, temperature=0.0)
+    st = eng.plan_stats()
+    assert st["n_layer_plans"] == 0
+    assert st["fallbacks"].get("step") == "family:hybrid"
+    assert "pallas_launches_per_step" in st
+    metric = eng.metrics.to_prometheus()
+    assert 'serving_plan_fallbacks_total{reason="family:hybrid"} 1' in metric
